@@ -1,0 +1,53 @@
+"""Beyond-paper benchmark: frontier-compressed crossbar exchange wire bytes
+vs the dense (paper-faithful) crossbar, per graph class. Analytic wire model
+over real engine executions (per-phase sparse/full decisions measured on an
+8-core mesh in a subprocess — jax device count is locked per process)."""
+from __future__ import annotations
+
+import json
+import subprocess
+import sys
+import textwrap
+
+_CHILD = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import numpy as np
+import repro.core.graph as G
+from repro.core.partition import PartitionConfig, partition_2d
+from repro.core.problems import bfs
+from repro.core.frontier import run_distributed_frontier
+from repro.core.reference import bfs_reference
+from repro.launch.mesh import make_graph_mesh
+mesh = make_graph_mesh(8)
+out = {}
+for name, g0, root, budget in [
+    ("grid-road", G.grid_2d(160, 100), 3, 128),
+    ("rmat-sparse", G.symmetrize(G.rmat(12, 8, seed=1)), 5, 128),
+]:
+    pg = partition_2d(g0, PartitionConfig(p=8, l=2, lane=8, stride=100))
+    res, stats = run_distributed_frontier(bfs(root), g0, pg, mesh, budget=budget)
+    assert np.array_equal(res.labels["label"], bfs_reference(g0, root))
+    out[name] = dict(iters=res.iterations, **{k: float(v) for k, v in stats.items()})
+print(json.dumps(out))
+"""
+
+
+def main(emit):
+    res = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(_CHILD)],
+        capture_output=True, text=True, timeout=1200,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"}, cwd="/root/repo",
+    )
+    if res.returncode != 0:
+        emit("frontier/error", 0.0, res.stderr[-200:].replace(",", ";"))
+        return
+    data = json.loads(res.stdout.strip().splitlines()[-1])
+    for name, s in data.items():
+        emit(
+            f"frontier/{name}",
+            0.0,
+            f"iters={int(s['iters'])} sparse={int(s['sparse_phases'])} "
+            f"full={int(s['full_phases'])} wire_reduction={s['reduction']:.2f}x",
+        )

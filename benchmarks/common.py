@@ -1,0 +1,58 @@
+"""Shared benchmark utilities: the Table III stand-in graph suite (synthetic,
+statistics matched to the paper's graphs at CPU-tractable scale), timing
+helpers, and MTEPS metrics (paper §IV-B)."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, Tuple
+
+import numpy as np
+
+import repro.core.graph as G
+
+__all__ = ["BENCH_GRAPHS", "bench_graphs", "time_call", "mteps", "mteps_star"]
+
+
+def bench_graphs(scale: str = "small") -> Dict[str, Tuple[G.COOGraph, int]]:
+    """name -> (graph, bfs_root). Stand-ins for Table III:
+    rmat-like (lj/orkut analogues), star (wiki-talk: low avg degree, hub),
+    grid (roadnet-ca: high diameter), dense rmat (mouse-gene analogue)."""
+    if scale == "tiny":
+        s1, s2 = 10, 9
+        grid = (40, 25)
+    else:
+        s1, s2 = 14, 12
+        grid = (160, 100)
+    return {
+        "rmat-sparse": (G.rmat(s1, 8, seed=1), 5),  # live-journal-ish skew
+        "rmat-dense": (G.rmat(s2, 48, seed=2), 7),  # orkut/mouse-gene density
+        "star-hub": (G.star((1 << s1) - 1), 0),  # wiki-talk-ish
+        "grid-road": (G.grid_2d(*grid), 3),  # roadnet-ca-ish (high diameter)
+    }
+
+
+BENCH_GRAPHS = bench_graphs
+
+
+def time_call(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall seconds (calls fn which must block on completion)."""
+    for _ in range(warmup):
+        fn(*args)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn(*args)
+        ts.append(time.perf_counter() - t0)
+    return sorted(ts)[len(ts) // 2]
+
+
+def mteps(num_edges: int, seconds: float) -> float:
+    """Graph500 MTEPS = |E| / t (the paper's headline metric; rewards
+    convergence in fewer iterations)."""
+    return num_edges / seconds / 1e6
+
+
+def mteps_star(num_edges: int, iterations: int, seconds: float) -> float:
+    """MTEPS* = |E| * iters / t (HitGraph/ThunderGP's raw edge-processing
+    metric; hides convergence — reported for comparability, paper §IV-B)."""
+    return num_edges * iterations / seconds / 1e6

@@ -1,0 +1,60 @@
+"""Render the roofline table (EXPERIMENTS.md SSRoofline) from the dry-run
+JSON records in results/dryrun/."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.launch.mesh import HW
+
+
+def load_records(out_dir: str = "results/dryrun"):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def render_markdown(recs, mesh: str = "single") -> str:
+    rows = [r for r in recs if r["mesh"] == mesh]
+    rows.sort(key=lambda r: r["key"])
+    lines = [
+        "| cell | compute s | memory s | collective s | dominant | "
+        "MODEL_FLOPs | useful ratio | mem/dev GiB |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        mem_gib = (
+            r["memory_analysis"]["argument_bytes"] + r["memory_analysis"]["temp_bytes"]
+        ) / 2**30
+        lines.append(
+            f"| {r['key']} | {r['compute_s']:.3e} | {r['memory_s']:.3e} | "
+            f"{r['collective_s']:.3e} | **{r['dominant']}** | "
+            f"{r['model_flops']:.2e} | {r['useful_ratio']:.3f} | {mem_gib:.2f} |"
+        )
+    return "\n".join(lines)
+
+
+def main(emit):
+    recs = load_records()
+    if not recs:
+        emit("roofline/none", 0.0, "no dry-run records found — run repro.launch.dryrun")
+        return
+    for r in recs:
+        dom_s = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        frac = r["compute_s"] / dom_s if dom_s > 0 else 0.0
+        emit(
+            f"roofline/{r['key']}/{r['mesh']}",
+            dom_s * 1e6,
+            f"dominant={r['dominant']} compute_frac_of_bound={frac:.3f} "
+            f"useful={r['useful_ratio']:.3f}",
+        )
+
+
+if __name__ == "__main__":
+    recs = load_records()
+    for mesh in ("single", "multi"):
+        print(f"\n## mesh = {mesh}\n")
+        print(render_markdown(recs, mesh))

@@ -1,0 +1,49 @@
+"""Benchmark harness — one module per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV (harness contract)."""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (
+        bench_fig1_motivation,
+        bench_fig9_optimizations,
+        bench_fig10_scalability,
+        bench_fig11_12_baseline,
+        bench_frontier,
+        bench_kernels,
+        bench_table2_resources,
+        roofline_table,
+    )
+
+    modules = [
+        bench_fig1_motivation,
+        bench_fig9_optimizations,
+        bench_fig10_scalability,
+        bench_fig11_12_baseline,
+        bench_table2_resources,
+        bench_kernels,
+        bench_frontier,
+        roofline_table,
+    ]
+    print("name,us_per_call,derived")
+
+    def emit(name: str, us: float, derived: str = ""):
+        print(f"{name},{us:.1f},{derived}", flush=True)
+
+    failed = 0
+    for m in modules:
+        try:
+            m.main(emit)
+        except Exception:  # noqa: BLE001
+            failed += 1
+            print(f"# FAILED {m.__name__}", file=sys.stderr)
+            traceback.print_exc()
+    if failed:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Train a GIN graph classifier on batched molecule graphs with the full
+production loop: deterministic data stream, checkpointing, preemption-safe
+recovery, straggler monitor.
+
+    PYTHONPATH=src python examples/gnn_training.py [steps]
+"""
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import ARCHS
+from repro.data.synthetic import batched_molecules
+from repro.dist.fault_tolerance import CheckpointPolicy, StepMonitor, run_with_recovery
+from repro.models.gnn import archs as gnn
+from repro.train.optim import AdamWConfig
+from repro.train.steps import init_train_state, make_gnn_train_step
+
+
+def main():
+    steps = int(sys.argv[1]) if len(sys.argv) > 1 else 200
+    cfg = ARCHS["gin-tu"].smoke()
+    ocfg = AdamWConfig(lr=3e-3, total_steps=steps, warmup_steps=10)
+
+    def init_state():
+        return init_train_state(gnn.init(jax.random.key(0), cfg, 16, 2), ocfg)
+
+    train = jax.jit(make_gnn_train_step(cfg, ocfg, task="graph_class"))
+    monitor = StepMonitor()
+    losses = []
+
+    def step_fn(state, i):
+        batch, labels = batched_molecules(
+            seed=1, n_graphs=32, nodes_per=16, edges_per=32, d_feat=16
+        )
+        # vary labels stream deterministically by step
+        rng = np.random.default_rng(i)
+        labels = ((labels + rng.integers(0, 2, labels.shape)) % 2).astype(np.int32)
+        state, m = train(state, batch, jnp.asarray(labels))
+        losses.append(float(m["loss"]))
+        if i % 25 == 0:
+            print(f"step {i:4d}  loss {float(m['loss']):.4f}")
+        return state, m
+
+    policy = CheckpointPolicy(directory="results/ckpt_gnn", every_steps=50)
+    state, metrics = run_with_recovery(
+        step_fn, init_state, steps, policy, monitor=monitor
+    )
+    print(f"done: {monitor.summary()}")
+    print(f"loss {losses[0]:.4f} -> {losses[-1]:.4f}")
+
+
+if __name__ == "__main__":
+    main()

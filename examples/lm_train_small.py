@@ -1,0 +1,46 @@
+"""Train a reduced smollm-style LM on the synthetic token stream for a few
+hundred steps on CPU — demonstrates the LM training path (scan-over-layers,
+chunked attention, AdamW, checkpoint/restore).
+
+    PYTHONPATH=src python examples/lm_train_small.py [steps]
+"""
+import sys
+
+import jax
+import jax.numpy as jnp
+
+from repro.data.synthetic import lm_batch
+from repro.dist.checkpoint import restore_checkpoint, save_checkpoint
+from repro.models.transformer import LMConfig, count_params, init_params
+from repro.train.optim import AdamWConfig
+from repro.train.steps import init_train_state, make_lm_train_step
+
+
+def main():
+    steps = int(sys.argv[1]) if len(sys.argv) > 1 else 300
+    cfg = LMConfig(
+        name="smollm-nano", n_layers=4, d_model=128, n_heads=4, n_kv_heads=2,
+        head_dim=32, d_ff=384, vocab=2048, dtype=jnp.float32, attn_chunk=64,
+    )
+    print(f"model: {count_params(cfg) / 1e6:.2f}M params")
+    ocfg = AdamWConfig(lr=1e-3, total_steps=steps, warmup_steps=20)
+    state = init_train_state(init_params(jax.random.key(0), cfg), ocfg)
+    train = jax.jit(make_lm_train_step(cfg, ocfg), donate_argnums=0)
+
+    first = None
+    for i in range(steps):
+        b = lm_batch(seed=0, step=i, batch=8, seq=128, vocab=cfg.vocab)
+        state, m = train(state, {k: jnp.asarray(v) for k, v in b.items()})
+        loss = float(m["loss"])
+        first = first if first is not None else loss
+        if i % 25 == 0 or i == steps - 1:
+            print(f"step {i:4d}  loss {loss:.4f}")
+    print(f"loss {first:.4f} -> {loss:.4f}")
+    path = save_checkpoint("results/ckpt_lm", steps, state, meta={"next_step": steps})
+    print(f"checkpoint saved: {path}")
+    restored, meta = restore_checkpoint("results/ckpt_lm", state)
+    print(f"restored at step {meta['next_step']} OK")
+
+
+if __name__ == "__main__":
+    main()

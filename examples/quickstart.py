@@ -1,0 +1,50 @@
+"""Quickstart: solve BFS, WCC, and PageRank with the GraphScale engine on a
+small real graph and a generated R-MAT graph, and verify against oracles.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+import repro.core.graph as G
+from repro.core.engine import EngineOptions, run
+from repro.core.partition import PartitionConfig, partition_2d
+from repro.core.problems import bfs, pagerank, wcc
+from repro.core.reference import bfs_reference, pagerank_reference, wcc_reference
+
+
+def main():
+    for name, g0, root in [
+        ("karate", G.karate_club(), 0),
+        ("rmat-12-16", G.rmat(12, 16, seed=0), 11),
+    ]:
+        g = G.symmetrize(g0)
+        # 4 graph cores x 4 scratch-pad phases, stride mapping on
+        pg = partition_2d(g, PartitionConfig(p=4, l=4, lane=8, stride=100))
+        print(f"\n=== {name}: |V|={g.num_vertices} |E|={g.num_edges} "
+              f"imbalance={pg.imbalance:.2f} ===")
+
+        r = run(bfs(root), g, pg, EngineOptions(immediate_updates=True))
+        ref = bfs_reference(g, root)
+        reached = int((r.labels["label"] != 0xFFFFFFFF).sum())
+        print(f"BFS   : {r.iterations} iters (async), reached {reached} vertices, "
+              f"correct={np.array_equal(r.labels['label'], ref)}")
+
+        r_sync = run(bfs(root), g, pg, EngineOptions(immediate_updates=False))
+        print(f"        sync needs {r_sync.iterations} iters "
+              f"(async saves {r_sync.iterations - r.iterations})")
+
+        rw = run(wcc(), g, pg, EngineOptions())
+        ncomp = len(np.unique(rw.labels["label"]))
+        print(f"WCC   : {rw.iterations} iters, {ncomp} components, "
+              f"correct={np.array_equal(rw.labels['label'], wcc_reference(g0))}")
+
+        pgd = partition_2d(g0, PartitionConfig(p=4, l=2, lane=8))
+        rp = run(pagerank(), g0, pgd, EngineOptions())
+        top = np.argsort(rp.labels["label"])[-3:][::-1]
+        err = np.abs(rp.labels["label"] - pagerank_reference(g0)).max()
+        print(f"PR    : {rp.iterations} iters, top vertices {top.tolist()}, "
+              f"max err vs oracle {err:.2e}")
+
+
+if __name__ == "__main__":
+    main()

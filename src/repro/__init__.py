@@ -1,0 +1,2 @@
+"""repro: GraphScale (Dann et al., 2022) reproduced as a multi-pod JAX framework."""
+__version__ = "0.1.0"

@@ -1,0 +1,40 @@
+"""Paper-native GraphScale configuration (Table II parameterization).
+
+FPGA -> framework mapping:
+  * 4 memory channels            -> p = 4 graph cores (or mesh size)
+  * vertex label scratch 2^21    -> scratch_size = 2**21 labels per core-phase
+  * 16 scratch-pad banks         -> lane quantum (8x128 vector layout on TPU)
+  * 8 vertex pipelines           -> edge-tile width Eb in the Pallas kernel
+  * reorder depth 32             -> crossbar capacity factor (dist/embedding)
+  * stride mapping stride 100    -> PartitionConfig.stride
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.partition import PartitionConfig
+
+PAPER_SCRATCH_LABELS = 1 << 21
+PAPER_STRIDE = 100
+PAPER_CHANNELS = 4
+
+
+def paper_partition_config(
+    p: int = PAPER_CHANNELS,
+    stride: int | None = PAPER_STRIDE,
+    lane: int = 8,
+) -> PartitionConfig:
+    return PartitionConfig(
+        p=p, l=1, lane=lane, stride=stride, scratch_size=PAPER_SCRATCH_LABELS
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelTiling:
+    """Pallas accumulator tile parameters (TPU target)."""
+
+    vb: int = 128  # rows per output block (sublane multiple)
+    eb: int = 1024  # edges per tile (8 x 128 lanes)
+
+
+PAPER_KERNEL_TILING = KernelTiling()

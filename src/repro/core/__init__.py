@@ -1,0 +1,2 @@
+"""GraphScale core: compressed asynchronous multi-core graph processing."""
+from repro.core import edge_centric, engine, graph, partition, problems, reference  # noqa: F401

@@ -1,0 +1,190 @@
+"""Frontier-compressed crossbar exchange (beyond-paper, DESIGN.md §7.1).
+
+The paper's crossbar always moves full label requests. For monotone
+min-problems (BFS/WCC/SSSP) the set of labels that changed since a core last
+broadcast its sub-interval — the *frontier* — collapses as the run converges;
+late iterations touch a handful of vertices. This engine variant keeps a
+replicated CACHE of every phase's gathered block and, per phase, exchanges
+only (index, value) pairs of changed labels under a static ``budget`` K,
+falling back to the full all-gather when any core's frontier exceeds K
+(decided collectively with a pmax, so all cores take the same branch).
+
+Wire cost per phase:  sparse  p * K * 8 bytes   vs   full  p * sub * 4 bytes
+— a win whenever the widest per-core frontier < sub/2·K... i.e. nearly every
+iteration after the expansion peak.
+
+Semantics are IDENTICAL to the dense engine (tested): the cache is updated
+with exactly the labels the dense path would re-gather.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.engine import EngineOptions, prepare_labels, unpad_labels, EngineResult
+from repro.core.partition import PartitionedGraph
+from repro.core.problems import Problem
+
+__all__ = ["run_distributed_frontier", "frontier_wire_bytes"]
+
+
+def _sparse_exchange(payload_sub, prev_mine, cache_row, sub, axis, budget):
+    """Exchange changed entries only; returns (new cache row, overflowed?)."""
+    changed = payload_sub != prev_mine
+    count = changed.sum()
+    max_count = jax.lax.pmax(count, axis)
+
+    def sparse(cache_row):
+        big = jnp.int32(sub)
+        idx = jnp.where(changed, jnp.arange(sub, dtype=jnp.int32), big)
+        idx = jnp.sort(idx)[:budget]  # changed indices first (padded with sub)
+        vals = payload_sub[jnp.minimum(idx, sub - 1)]
+        all_idx = jax.lax.all_gather(idx, axis, axis=0)  # (p, K)
+        all_vals = jax.lax.all_gather(vals, axis, axis=0)  # (p, K)
+        p = all_idx.shape[0]
+        base = jnp.arange(p, dtype=jnp.int32)[:, None] * sub
+        flat_pos = jnp.where(all_idx < sub, base + all_idx, p * sub).reshape(-1)
+        flat_val = all_vals.reshape(-1)
+        padded = jnp.concatenate([cache_row, cache_row[-1:]])
+        padded = padded.at[flat_pos].set(flat_val)
+        return padded[:-1]
+
+    def full(cache_row):
+        return jax.lax.all_gather(payload_sub, axis, axis=0, tiled=True)
+
+    overflow = max_count > budget
+    new_row = jax.lax.cond(overflow, full, sparse, cache_row)
+    return new_row, overflow, count
+
+
+def run_distributed_frontier(
+    problem: Problem,
+    g,
+    pg: PartitionedGraph,
+    mesh: Mesh,
+    axis: str = "graph",
+    opts: EngineOptions = EngineOptions(),
+    budget: int = 64,
+) -> Tuple[EngineResult, Dict[str, np.ndarray]]:
+    """Min-problem engine with frontier-compressed exchange. Returns the
+    result plus per-run wire statistics (sparse phases vs full phases)."""
+    assert problem.reduce_kind == "min" and opts.immediate_updates
+    assert pg.p == mesh.shape[axis]
+    sub, l, vpc = pg.sub_size, pg.l, pg.vertices_per_core
+
+    labels0 = prepare_labels(problem, g, pg)
+    sharded = {
+        k: jax.device_put(
+            v, NamedSharding(mesh, P(axis) if getattr(v, "ndim", 0) >= 1 else P())
+        )
+        for k, v in labels0.items()
+    }
+
+    def body(labels, sg, dl, vm):
+        labels = {k: (v[0] if getattr(v, "ndim", 0) >= 1 and v.shape[0] == 1 else v)
+                  for k, v in labels.items()}
+        sg, dl, vm = sg[0], dl[0], vm[0]
+        my_core = jax.lax.axis_index(axis)  # selects this core's cache slice
+        payload0 = problem.src_transform(labels)
+        # cache rows start from the true initial gathered blocks (one full
+        # gather per phase — same cost the dense engine pays on iteration 1)
+        init_rows = []
+        for m in range(l):
+            blk = jax.lax.dynamic_slice_in_dim(payload0, m * sub, sub, axis=0)
+            init_rows.append(jax.lax.all_gather(blk, axis, axis=0, tiled=True))
+        cache0 = jnp.stack(init_rows)  # (l, p*sub)
+
+        def phase(m, carry):
+            labels, cache, nsparse, nfull = carry
+            payload = problem.src_transform(labels)
+            mine = jax.lax.dynamic_slice_in_dim(payload, m * sub, sub, axis=0)
+            prev_mine = jax.lax.dynamic_slice(
+                cache, (m, my_core * sub), (1, sub)
+            )[0]
+            row = jax.lax.dynamic_index_in_dim(cache, m, axis=0, keepdims=False)
+            new_row, overflow, _ = _sparse_exchange(
+                mine, prev_mine, row, sub, axis, budget
+            )
+            cache = jax.lax.dynamic_update_index_in_dim(cache, new_row, m, axis=0)
+            sg_m = jax.lax.dynamic_index_in_dim(sg, m, 0, keepdims=False)
+            dl_m = jax.lax.dynamic_index_in_dim(dl, m, 0, keepdims=False)
+            vm_m = jax.lax.dynamic_index_in_dim(vm, m, 0, keepdims=False)
+            svals = jnp.take(new_row, sg_m, axis=0)
+            contrib = problem.edge_map(svals, None)
+            contrib = jnp.where(vm_m, contrib, jnp.asarray(problem.identity, contrib.dtype))
+            reduced = jax.ops.segment_min(
+                contrib, dl_m, num_segments=vpc, indices_are_sorted=True
+            )
+            lab = labels[problem.merge_field]
+            new = dict(labels)
+            new[problem.merge_field] = jnp.minimum(lab, reduced.astype(lab.dtype))
+            return (
+                new, cache,
+                nsparse + (1 - overflow.astype(jnp.int32)),
+                nfull + overflow.astype(jnp.int32),
+            )
+
+        def cond2(carry):
+            _, _, it, changed, _, _ = carry
+            return jnp.logical_and(changed, it < opts.max_iters)
+
+        def body2(carry):
+            labels, cache, it, _, ns, nf = carry
+            new, cache, ns, nf = jax.lax.fori_loop(
+                0, l, phase, (labels, cache, ns, nf)
+            )
+            changed = jax.lax.psum(
+                problem.not_converged(labels, new).astype(jnp.int32), axis
+            ) > 0
+            return new, cache, it + 1, changed, ns, nf
+
+        labels, cache, iters, changed, nsparse, nfull = jax.lax.while_loop(
+            cond2, body2,
+            (labels, cache0, jnp.int32(0), jnp.bool_(True), jnp.int32(0), jnp.int32(0)),
+        )
+        labels = {k: (v[None] if getattr(v, "ndim", 0) >= 1 and v.shape[0] == vpc else v)
+                  for k, v in labels.items()}
+        return labels, iters, changed, nsparse, nfull
+
+    label_spec = {k: (P(axis) if getattr(np.asarray(v), "ndim", 0) >= 1 else P())
+                  for k, v in labels0.items()}
+    fn = jax.shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(label_spec, P(axis, None, None), P(axis, None, None), P(axis, None, None)),
+        out_specs=(label_spec, P(), P(), P(), P()),
+        check_vma=False,
+    )
+    out, iters, changed, nsparse, nfull = jax.jit(fn)(
+        sharded, jnp.asarray(pg.src_gidx), jnp.asarray(pg.dst_lidx), jnp.asarray(pg.valid)
+    )
+    stats = frontier_wire_bytes(pg, int(nsparse), int(nfull), budget,
+                                np.dtype(np.asarray(out[problem.merge_field]).dtype).itemsize)
+    res = EngineResult(
+        labels=unpad_labels({k: np.asarray(v) for k, v in out.items()}, pg),
+        iterations=int(iters),
+        converged=not bool(changed),
+    )
+    return res, stats
+
+
+def frontier_wire_bytes(pg, nsparse: int, nfull: int, budget: int, label_bytes: int):
+    """Per-device wire bytes: sparse phase = p*K*(4+label); full = p*sub*label.
+    Includes the one-time initial full gather of all l phases."""
+    p, sub, l = pg.p, pg.sub_size, pg.l
+    full_phase = p * sub * label_bytes
+    sparse_phase = p * budget * (4 + label_bytes)
+    dense_equivalent = (nsparse + nfull + l) * full_phase
+    actual = l * full_phase + nsparse * sparse_phase + nfull * full_phase
+    return {
+        "sparse_phases": nsparse,
+        "full_phases": nfull,
+        "bytes_actual": actual,
+        "bytes_dense_equivalent": dense_equivalent,
+        "reduction": dense_equivalent / max(actual, 1),
+    }

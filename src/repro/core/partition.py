@@ -1,0 +1,263 @@
+"""Two-dimensional graph partitioning (paper §III-C) + stride mapping.
+
+Dimension 1: the (padded) vertex set is split into ``p`` equal intervals
+``I_q`` — one per graph core / mesh device; core ``q`` owns all edges whose
+*destination* lies in ``I_q`` (pull-based horizontal partitioning of the
+inverse edge set).
+
+Dimension 2: each interval is split into ``l`` equal sub-intervals ``J`` of
+``sub_size`` vertices — sized so a sub-interval's labels fit the label scratch
+pad (FPGA: BRAM; TPU: the per-phase gathered VMEM block). Sub-partition
+``S[i, m]`` holds edges with dst ∈ I_i and src ∈ ∪_q J[q, m]; the ``p``
+sub-intervals { J[q, m] : q } active at phase ``m`` form meta-partition M_m.
+
+Neighbor indices are rewritten at partition time so that a source vertex id
+becomes a direct offset into the phase's gathered label block:
+``gathered_idx = src_core * sub_size + (src mod sub_size)`` — the TPU analogue
+of the paper's "first log2(p) bits address the core" crossbar routing.
+
+Everything here is host-side numpy; outputs are static-shape arrays.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from repro.core.graph import COOGraph
+
+__all__ = [
+    "PartitionConfig",
+    "PartitionedGraph",
+    "EdgeCentricPartition",
+    "stride_permutation",
+    "apply_permutation",
+    "partition_2d",
+    "partition_edge_centric",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class PartitionConfig:
+    p: int  # graph cores == memory channels == mesh devices
+    l: int  # sub-intervals per interval (scratch-pad phases)
+    lane: int = 8  # sub_size alignment (TPU lane quantum; 128 on real HW)
+    edge_pad: int = 8  # per-bucket edge-count alignment
+    stride: Optional[int] = None  # stride mapping (paper uses 100); None = off
+    scratch_size: Optional[int] = None  # if set, l is derived: labels per core phase
+
+
+@dataclasses.dataclass(frozen=True)
+class PartitionedGraph:
+    """Static-shape 2-D partitioned inverse-CSR-equivalent edge layout.
+
+    Edge arrays are laid out (p, l, E_pad): bucket [i, m] is sub-partition
+    S[i, m] sorted by local destination. ``src_gidx`` indexes the phase-m
+    gathered block (size p * sub_size); ``dst_lidx`` indexes core i's local
+    label shard (size l * sub_size).
+    """
+
+    p: int
+    l: int
+    sub_size: int
+    num_vertices: int  # real V
+    num_edges: int  # real E
+    src_gidx: np.ndarray  # (p, l, E_pad) int32
+    dst_lidx: np.ndarray  # (p, l, E_pad) int32
+    valid: np.ndarray  # (p, l, E_pad) bool
+    weights: Optional[np.ndarray]  # (p, l, E_pad) float32 or None
+    perm: Optional[np.ndarray]  # old -> new vertex id (stride mapping), or None
+    inv_perm: Optional[np.ndarray]
+    bucket_sizes: np.ndarray  # (p, l) int64 — real edges per sub-partition
+
+    @property
+    def vertices_per_core(self) -> int:
+        return self.l * self.sub_size
+
+    @property
+    def padded_vertices(self) -> int:
+        return self.p * self.l * self.sub_size
+
+    @property
+    def gathered_size(self) -> int:
+        return self.p * self.sub_size
+
+    @property
+    def edge_pad(self) -> int:
+        return int(self.src_gidx.shape[-1])
+
+    @property
+    def padding_ratio(self) -> float:
+        """Padded-slot fraction — the TPU cost of load imbalance (paper §IV-A:
+        'imbalanced partitions lead to a lot of idle time')."""
+        total_slots = self.p * self.l * self.edge_pad
+        return 1.0 - float(self.bucket_sizes.sum()) / max(total_slots, 1)
+
+    @property
+    def imbalance(self) -> float:
+        """max/mean real edges over buckets (1.0 = perfectly balanced)."""
+        mean = self.bucket_sizes.mean()
+        return float(self.bucket_sizes.max() / mean) if mean > 0 else 1.0
+
+
+def stride_permutation(num_vertices: int, stride: int = 100) -> np.ndarray:
+    """Paper §III-C stride mapping: new order v0, v100, v200, ..., v1, v101, ...
+
+    Returns ``perm`` with ``perm[old_id] = new_id``.
+    """
+    order = np.lexsort(
+        (np.arange(num_vertices) // stride, np.arange(num_vertices) % stride)
+    )
+    # order[k] = old id at new position k  ->  invert
+    perm = np.empty(num_vertices, dtype=np.int64)
+    perm[order] = np.arange(num_vertices, dtype=np.int64)
+    return perm
+
+
+def apply_permutation(g: COOGraph, perm: np.ndarray) -> COOGraph:
+    return COOGraph(
+        src=perm[g.src].astype(np.uint32),
+        dst=perm[g.dst].astype(np.uint32),
+        num_vertices=g.num_vertices,
+        weights=g.weights,
+    )
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def partition_2d(g: COOGraph, cfg: PartitionConfig) -> PartitionedGraph:
+    """Partition the *processing* edge set (u -> v means "v pulls from u").
+
+    ``g`` must already be the edge set in pull orientation (for BFS/WCC/SSSP/PR
+    on directed input, pass the original COO: dst pulls from src along inverse
+    edges, which is exactly iterating (src, dst) grouped by dst).
+    """
+    perm = inv = None
+    if cfg.stride is not None and cfg.stride > 1:
+        perm = stride_permutation(g.num_vertices, cfg.stride)
+        inv = np.argsort(perm)
+        g = apply_permutation(g, perm)
+
+    p, l = cfg.p, cfg.l
+    if cfg.scratch_size is not None:
+        # derive l from scratch capacity (paper: sub-interval fits scratch pad)
+        per_core = _round_up(-(-g.num_vertices // p), cfg.lane)
+        l = max(1, -(-per_core // cfg.scratch_size))
+    sub_size = _round_up(-(-g.num_vertices // (p * l)), cfg.lane)
+    vpc = l * sub_size  # vertices per core (padded interval size)
+
+    src = g.src.astype(np.int64)
+    dst = g.dst.astype(np.int64)
+    core = dst // vpc  # dim-1: destination interval owns the edge
+    phase = (src % vpc) // sub_size  # dim-2: source sub-interval index
+    src_core = src // vpc
+    gidx = src_core * sub_size + (src % sub_size)  # crossbar routing rewrite
+    lidx = dst % vpc
+
+    # bucket sort by (core, phase), then by local dst inside each bucket
+    key = (core * l + phase) * (vpc + 1) + lidx
+    order = np.argsort(key, kind="stable")
+    core, phase, gidx, lidx = core[order], phase[order], gidx[order], lidx[order]
+    w = g.weights[order] if g.weights is not None else None
+
+    bucket_id = core * l + phase
+    sizes = np.bincount(bucket_id, minlength=p * l).reshape(p, l)
+    e_pad = max(_round_up(int(sizes.max()), cfg.edge_pad), cfg.edge_pad)
+
+    src_gidx = np.zeros((p, l, e_pad), dtype=np.int32)
+    # padding edges point at the LAST local row so per-bucket dst stays sorted
+    # (segment reduces use indices_are_sorted=True); they carry the reduce
+    # identity so the row's value is unaffected.
+    dst_lidx = np.full((p, l, e_pad), vpc - 1, dtype=np.int32)
+    valid = np.zeros((p, l, e_pad), dtype=bool)
+    weights = np.zeros((p, l, e_pad), dtype=np.float32) if w is not None else None
+
+    starts = np.zeros(p * l + 1, dtype=np.int64)
+    np.cumsum(sizes.ravel(), out=starts[1:])
+    for i in range(p):
+        for m in range(l):
+            b = i * l + m
+            s, e = starts[b], starts[b + 1]
+            n = int(e - s)
+            src_gidx[i, m, :n] = gidx[s:e]
+            dst_lidx[i, m, :n] = lidx[s:e]
+            valid[i, m, :n] = True
+            if weights is not None:
+                weights[i, m, :n] = w[s:e]
+
+    return PartitionedGraph(
+        p=p,
+        l=l,
+        sub_size=sub_size,
+        num_vertices=g.num_vertices,
+        num_edges=g.num_edges,
+        src_gidx=src_gidx,
+        dst_lidx=dst_lidx,
+        valid=valid,
+        weights=weights,
+        perm=perm,
+        inv_perm=inv,
+        bucket_sizes=sizes,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Edge-centric (HitGraph/ThunderGP-style) partitioning for the baseline engine:
+# horizontal partitioning of the *edge list* by destination interval, no
+# sub-intervals, no compression (src kept as a global vertex id).
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class EdgeCentricPartition:
+    p: int
+    num_vertices: int
+    num_edges: int
+    vertices_per_core: int
+    src_vid: np.ndarray  # (p, E_pad) int32 global (padded) src vertex id
+    dst_lidx: np.ndarray  # (p, E_pad) int32 local dst id
+    valid: np.ndarray  # (p, E_pad) bool
+    weights: Optional[np.ndarray]
+    bucket_sizes: np.ndarray  # (p,)
+
+
+def partition_edge_centric(
+    g: COOGraph, p: int, lane: int = 8, edge_pad: int = 8
+) -> EdgeCentricPartition:
+    vpc = _round_up(-(-g.num_vertices // p), lane)
+    src = g.src.astype(np.int64)
+    dst = g.dst.astype(np.int64)
+    core = dst // vpc
+    order = np.argsort(core * (g.num_vertices + 1) + dst, kind="stable")
+    src, dst, core = src[order], dst[order], core[order]
+    w = g.weights[order] if g.weights is not None else None
+    sizes = np.bincount(core, minlength=p)
+    e_pad = max(_round_up(int(sizes.max()), edge_pad), edge_pad)
+    src_vid = np.zeros((p, e_pad), dtype=np.int32)
+    dst_lidx = np.full((p, e_pad), vpc - 1, dtype=np.int32)  # keep sorted under padding
+    valid = np.zeros((p, e_pad), dtype=bool)
+    weights = np.zeros((p, e_pad), dtype=np.float32) if w is not None else None
+    starts = np.zeros(p + 1, dtype=np.int64)
+    np.cumsum(sizes, out=starts[1:])
+    for i in range(p):
+        s, e = starts[i], starts[i + 1]
+        n = int(e - s)
+        src_vid[i, :n] = src[s:e]
+        dst_lidx[i, :n] = dst[s:e] - i * vpc
+        valid[i, :n] = True
+        if weights is not None:
+            weights[i, :n] = w[s:e]
+    return EdgeCentricPartition(
+        p=p,
+        num_vertices=g.num_vertices,
+        num_edges=g.num_edges,
+        vertices_per_core=vpc,
+        src_vid=src_vid,
+        dst_lidx=dst_lidx,
+        valid=valid,
+        weights=weights,
+        bucket_sizes=sizes,
+    )

@@ -1,0 +1,196 @@
+"""Graph problems as map/reduce user-defined functions (paper §III, §IV).
+
+A ``Problem`` mirrors the paper's UDF plug-in surface for the graph-core
+accumulator:
+
+  * ``src_transform`` — the per-source part of the *map* UDF, evaluated on the
+    label shard **before** the crossbar exchange (cheap elementwise work; the
+    exchanged payload stays one word per vertex exactly like the paper's
+    32-bit labels — PR exchanges rank/deg pre-divided, matching the paper's
+    packed (degree, rank) 64-bit label semantics with half the traffic).
+  * ``edge_map`` — the per-edge part of the map UDF (adds the edge weight for
+    SSSP; identity otherwise).
+  * ``reduce_kind`` — 'min' or 'sum': the reduce UDF of the accumulator
+    (BFS/WCC/SSSP = min, PR = sum). Exactly the paper's switchable reduce PE.
+  * ``apply`` semantics are implied by ``reduce_kind``: min-problems merge into
+    the old label (idempotent → may be applied per phase = asynchronous);
+    sum-problems replace via ``finalize`` at iteration end (the paper's PR
+    double buffering over two vertex label arrays).
+
+Labels are dicts of (…, Vl) arrays so problems may carry auxiliary per-vertex
+state (e.g. PR's inverse out-degree) without the engine knowing.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.graph import COOGraph, out_degrees
+
+__all__ = ["Problem", "bfs", "wcc", "sssp", "pagerank", "INF_U32"]
+
+INF_U32 = np.uint32(0xFFFFFFFF)
+
+LabelTree = Dict[str, jnp.ndarray]
+
+
+@dataclasses.dataclass(frozen=True)
+class Problem:
+    name: str
+    reduce_kind: str  # 'min' | 'sum'
+    # host-side: build initial (padded) label tree given padded size & graph
+    init_labels: Callable[[COOGraph, int], Dict[str, np.ndarray]]
+    # device-side map UDF, source half: label sub-tree -> exchanged payload
+    src_transform: Callable[[LabelTree], jnp.ndarray]
+    # device-side map UDF, edge half: (payload_at_src, edge_weight|None) -> contribution
+    edge_map: Callable[[jnp.ndarray, Optional[jnp.ndarray]], jnp.ndarray]
+    # identity element of the reduce UDF
+    identity: float
+    # iteration finalize for sum problems: (labels, accumulated) -> new labels
+    finalize: Optional[Callable[[LabelTree, jnp.ndarray], LabelTree]] = None
+    # convergence: (old, new) -> bool scalar (True = keep iterating)
+    not_converged: Optional[Callable[[LabelTree, LabelTree], jnp.ndarray]] = None
+    # which label field is merged by min-problems
+    merge_field: str = "label"
+    tol: float = 1e-6
+
+    def payload_dtype(self, labels: Dict[str, np.ndarray]):
+        return labels[self.merge_field].dtype
+
+
+# ---------------------------------------------------------------------------
+# BFS — label = hop distance from root; map = src+1; reduce = min.
+# ---------------------------------------------------------------------------
+
+
+def bfs(root: int) -> Problem:
+    def init(g: COOGraph, padded: int):
+        lab = np.full(padded, INF_U32, dtype=np.uint32)
+        lab[root] = 0
+        return {"label": lab}
+
+    def src_transform(labels: LabelTree) -> jnp.ndarray:
+        lab = labels["label"]
+        # saturating +1 so INF stays INF
+        return jnp.where(lab == INF_U32, lab, lab + jnp.uint32(1))
+
+    def edge_map(z, w):
+        return z
+
+    def not_conv(old: LabelTree, new: LabelTree):
+        return jnp.any(old["label"] != new["label"])
+
+    return Problem(
+        name="bfs",
+        reduce_kind="min",
+        init_labels=init,
+        src_transform=src_transform,
+        edge_map=edge_map,
+        identity=float(INF_U32),
+        not_converged=not_conv,
+    )
+
+
+# ---------------------------------------------------------------------------
+# WCC — label = min vertex id in the weakly connected component. Requires the
+# symmetrized edge set (undirected closure), as in the paper.
+# ---------------------------------------------------------------------------
+
+
+def wcc() -> Problem:
+    def init(g: COOGraph, padded: int):
+        lab = np.arange(padded, dtype=np.uint32)
+        return {"label": lab}
+
+    def not_conv(old: LabelTree, new: LabelTree):
+        return jnp.any(old["label"] != new["label"])
+
+    return Problem(
+        name="wcc",
+        reduce_kind="min",
+        init_labels=init,
+        src_transform=lambda labels: labels["label"],
+        edge_map=lambda z, w: z,
+        identity=float(INF_U32),
+        not_converged=not_conv,
+    )
+
+
+# ---------------------------------------------------------------------------
+# SSSP — min-plus with float32 edge weights (HitGraph's BFS comparison uses
+# unit weights; we support general non-negative weights).
+# ---------------------------------------------------------------------------
+
+INF_F32 = np.float32(np.finfo(np.float32).max)
+
+
+def sssp(root: int) -> Problem:
+    def init(g: COOGraph, padded: int):
+        lab = np.full(padded, INF_F32, dtype=np.float32)
+        lab[root] = 0.0
+        return {"label": lab}
+
+    def edge_map(z, w):
+        return jnp.where(z >= INF_F32, z, z + (w if w is not None else 1.0))
+
+    def not_conv(old: LabelTree, new: LabelTree):
+        return jnp.any(old["label"] != new["label"])
+
+    return Problem(
+        name="sssp",
+        reduce_kind="min",
+        init_labels=init,
+        src_transform=lambda labels: labels["label"],
+        edge_map=edge_map,
+        identity=float(INF_F32),
+        not_converged=not_conv,
+    )
+
+
+# ---------------------------------------------------------------------------
+# PageRank — pull-based power iteration:
+#   p(i) <- (1-d)/|V| + d * sum_{j in N_in(i)} p(j) / outdeg(j)
+# Exchanged payload is rank * inv_outdeg (the per-source map half), reduce=sum,
+# finalize applies damping. Convergence on max |delta| < tol, or max_iters.
+# ---------------------------------------------------------------------------
+
+
+def pagerank(damping: float = 0.85, tol: float = 1e-6) -> Problem:
+    def init(g: COOGraph, padded: int):
+        deg = out_degrees(g).astype(np.float32)
+        inv = np.zeros(padded, dtype=np.float32)
+        nz = deg > 0
+        inv[: g.num_vertices][nz] = 1.0 / deg[nz]
+        rank = np.zeros(padded, dtype=np.float32)
+        rank[: g.num_vertices] = 1.0 / g.num_vertices
+        mask = np.zeros(padded, dtype=np.float32)
+        mask[: g.num_vertices] = 1.0
+        return {"label": rank, "inv_deg": inv, "mask": mask, "n": np.float32(g.num_vertices)}
+
+    def src_transform(labels: LabelTree) -> jnp.ndarray:
+        return labels["label"] * labels["inv_deg"]
+
+    def finalize(labels: LabelTree, acc: jnp.ndarray) -> LabelTree:
+        n = labels["n"]
+        new_rank = ((1.0 - damping) / n + damping * acc) * labels["mask"]
+        out = dict(labels)
+        out["label"] = new_rank
+        return out
+
+    def not_conv(old: LabelTree, new: LabelTree):
+        return jnp.max(jnp.abs(old["label"] - new["label"])) > tol
+
+    return Problem(
+        name="pagerank",
+        reduce_kind="sum",
+        init_labels=init,
+        src_transform=src_transform,
+        edge_map=lambda z, w: z,
+        identity=0.0,
+        finalize=finalize,
+        not_converged=not_conv,
+        tol=tol,
+    )

@@ -1,0 +1,1 @@
+from repro.data import neighbor_sampler, synthetic  # noqa: F401

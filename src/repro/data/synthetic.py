@@ -1,0 +1,140 @@
+"""Synthetic data generators for every architecture family (offline container:
+no external datasets; statistics matched to the assigned shapes).
+
+All generators are deterministic in (seed, step) so a restarted trainer can
+skip ahead and reproduce the exact stream — the checkpoint/restart integration
+test relies on this (dist/fault_tolerance.py).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import numpy as np
+
+from repro.models.gnn.common import GraphBatch
+
+__all__ = [
+    "lm_batch",
+    "recsys_batch",
+    "retrieval_batch",
+    "graph_batch_from_coo",
+    "batched_molecules",
+    "random_positions_distances",
+]
+
+
+def lm_batch(seed: int, step: int, batch: int, seq: int, vocab: int) -> Dict[str, np.ndarray]:
+    """Zipf-distributed token stream with next-token labels."""
+    rng = np.random.default_rng(np.random.SeedSequence([seed, step]))
+    toks = rng.zipf(1.3, size=(batch, seq + 1)).astype(np.int64)
+    toks = np.minimum(toks, vocab - 1).astype(np.int32)
+    return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+
+def recsys_batch(
+    seed: int, step: int, batch: int, seq_len: int, item_vocab: int, cate_vocab: int,
+    profile_len: int = 32,
+) -> Dict[str, np.ndarray]:
+    rng = np.random.default_rng(np.random.SeedSequence([seed, step, 7]))
+    hist_items = rng.integers(0, item_vocab, (batch, seq_len)).astype(np.int32)
+    lengths = rng.integers(5, seq_len + 1, (batch,))
+    mask = np.arange(seq_len)[None, :] < lengths[:, None]
+    hist_items = np.where(mask, hist_items, -1)
+    hist_cates = np.where(mask, hist_items % cate_vocab, -1).astype(np.int32)
+    target_item = rng.integers(0, item_vocab, (batch,)).astype(np.int32)
+    profile = rng.integers(0, cate_vocab, (batch, profile_len)).astype(np.int32)
+    profile[rng.random((batch, profile_len)) < 0.3] = -1
+    # click label correlated with overlap of target category and history
+    overlap = (hist_cates == (target_item % cate_vocab)[:, None]).sum(1)
+    p = 1.0 / (1.0 + np.exp(-(overlap - 1.0)))
+    labels = (rng.random(batch) < p).astype(np.float32)
+    return {
+        "hist_items": hist_items,
+        "hist_cates": hist_cates,
+        "target_item": target_item,
+        "target_cate": (target_item % cate_vocab).astype(np.int32),
+        "profile_bag": profile,
+        "labels": labels,
+    }
+
+
+def retrieval_batch(
+    seed: int, seq_len: int, n_candidates: int, item_vocab: int, cate_vocab: int,
+    profile_len: int = 32,
+) -> Dict[str, np.ndarray]:
+    rng = np.random.default_rng(seed)
+    hist = rng.integers(0, item_vocab, (1, seq_len)).astype(np.int32)
+    cand = rng.integers(0, item_vocab, (n_candidates,)).astype(np.int32)
+    return {
+        "hist_items": hist,
+        "hist_cates": (hist % cate_vocab).astype(np.int32),
+        "profile_bag": rng.integers(0, cate_vocab, (1, profile_len)).astype(np.int32),
+        "cand_items": cand,
+        "cand_cates": (cand % cate_vocab).astype(np.int32),
+    }
+
+
+def random_positions_distances(rng, src, dst, n_nodes, box: float = 10.0):
+    pos = rng.random((n_nodes, 3)).astype(np.float32) * box
+    d = np.linalg.norm(pos[src] - pos[dst], axis=-1).astype(np.float32)
+    return pos, d
+
+
+def graph_batch_from_coo(
+    src: np.ndarray,
+    dst: np.ndarray,
+    n_nodes: int,
+    d_feat: int,
+    seed: int = 0,
+    n_classes: int = 8,
+    with_dist: bool = True,
+) -> Tuple[GraphBatch, np.ndarray]:
+    """Single full graph -> GraphBatch + node labels (classification)."""
+    rng = np.random.default_rng(seed)
+    feat = rng.standard_normal((n_nodes, d_feat)).astype(np.float32)
+    labels = rng.integers(0, n_classes, (n_nodes,)).astype(np.int32)
+    dist = None
+    if with_dist:
+        _, dist = random_positions_distances(rng, src, dst, n_nodes)
+    batch = GraphBatch(
+        node_feat=feat,
+        edge_src=src.astype(np.int32),
+        edge_dst=dst.astype(np.int32),
+        node_mask=np.ones(n_nodes, bool),
+        edge_mask=np.ones(len(src), bool),
+        graph_id=np.zeros(n_nodes, np.int32),
+        n_graphs=1,
+        edge_dist=dist,
+    )
+    return batch, labels
+
+
+def batched_molecules(
+    seed: int, n_graphs: int, nodes_per: int, edges_per: int, d_feat: int,
+    n_classes: int = 2,
+) -> Tuple[GraphBatch, np.ndarray]:
+    """TU-style batch of small graphs (molecule shape: 30 nodes / 64 edges)."""
+    rng = np.random.default_rng(seed)
+    n = n_graphs * nodes_per
+    e = n_graphs * edges_per
+    src = np.zeros(e, np.int32)
+    dst = np.zeros(e, np.int32)
+    for g in range(n_graphs):
+        s = rng.integers(0, nodes_per, edges_per)
+        d = rng.integers(0, nodes_per, edges_per)
+        src[g * edges_per : (g + 1) * edges_per] = g * nodes_per + s
+        dst[g * edges_per : (g + 1) * edges_per] = g * nodes_per + d
+    feat = rng.standard_normal((n, d_feat)).astype(np.float32)
+    _, dist = random_positions_distances(rng, src, dst, n)
+    batch = GraphBatch(
+        node_feat=feat,
+        edge_src=src,
+        edge_dst=dst,
+        node_mask=np.ones(n, bool),
+        edge_mask=np.ones(e, bool),
+        graph_id=np.repeat(np.arange(n_graphs, dtype=np.int32), nodes_per),
+        n_graphs=n_graphs,
+        edge_dist=dist,
+    )
+    labels = rng.integers(0, n_classes, (n_graphs,)).astype(np.int32)
+    return batch, labels

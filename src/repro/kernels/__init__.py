@@ -1,0 +1,5 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+Each kernel package ships kernel.py (pl.pallas_call + BlockSpec), ops.py
+(jit'd wrapper + host prep), ref.py (pure-jnp oracle used by tests).
+"""

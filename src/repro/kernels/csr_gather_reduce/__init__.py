@@ -1,0 +1,8 @@
+from repro.kernels.csr_gather_reduce import ops, ref  # noqa: F401
+from repro.kernels.csr_gather_reduce.kernel import gather_reduce_pallas  # noqa: F401
+from repro.kernels.csr_gather_reduce.ops import (  # noqa: F401
+    TileLayout,
+    gather_reduce,
+    prepare_tiles,
+    segment_reduce_rows,
+)

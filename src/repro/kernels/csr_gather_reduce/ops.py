@@ -1,0 +1,145 @@
+"""Host-side tile preparation + jitted wrapper for the accumulator kernel.
+
+``prepare_tiles`` bins a (dst-sorted) edge bucket into (R, T, Eb) row-block
+tiles at partition time (numpy). ``gather_reduce`` runs the Pallas kernel;
+``segment_reduce_rows`` is the reduce-only variant used when contributions are
+already materialized (engine fallback path).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.csr_gather_reduce.kernel import gather_reduce_pallas
+from repro.kernels.csr_gather_reduce.ref import gather_reduce_reference
+
+__all__ = ["TileLayout", "prepare_tiles", "gather_reduce", "segment_reduce_rows"]
+
+
+@dataclasses.dataclass(frozen=True)
+class TileLayout:
+    """(R, T, Eb) row-block binned edges; padding slots have valid=False."""
+
+    src: np.ndarray  # (R, T, Eb) int32
+    dstb: np.ndarray  # (R, T, Eb) int32 in [0, vb)
+    valid: np.ndarray  # (R, T, Eb) bool
+    weights: np.ndarray | None  # (R, T, Eb) f32
+    vb: int
+    num_rows: int
+    # slot -> index into the ORIGINAL (pre-binning) edge arrays, 0 on padding.
+    # Lets runtime-traced per-edge values (e.g. GAT scores) be laid out into
+    # tile order with one static gather.
+    gather_idx: np.ndarray | None = None  # (R, T, Eb) int64
+
+    @property
+    def tile_padding_ratio(self) -> float:
+        total = self.valid.size
+        return 1.0 - float(self.valid.sum()) / max(total, 1)
+
+
+def prepare_tiles(
+    src_gidx: np.ndarray,  # (E,) int32
+    dst_lidx: np.ndarray,  # (E,) int32, sorted ascending
+    valid: np.ndarray,  # (E,) bool
+    num_rows: int,
+    vb: int,
+    eb: int,
+    weights: np.ndarray | None = None,
+) -> TileLayout:
+    assert num_rows % vb == 0, (num_rows, vb)
+    r_blocks = num_rows // vb
+    src_gidx = np.asarray(src_gidx)
+    dst_lidx = np.asarray(dst_lidx)
+    valid = np.asarray(valid)
+
+    keep = valid
+    orig_idx = np.nonzero(keep)[0]
+    src_r = src_gidx[keep]
+    dst_r = dst_lidx[keep]
+    w_r = weights[keep] if weights is not None else None
+    block = dst_r // vb
+    # edges are dst-sorted => block ids are non-decreasing; stable layout
+    counts = np.bincount(block, minlength=r_blocks)
+    t_tiles = max(1, int(-(-counts.max() // eb))) if counts.size else 1
+    src_t = np.zeros((r_blocks, t_tiles, eb), dtype=np.int32)
+    dst_t = np.zeros((r_blocks, t_tiles, eb), dtype=np.int32)
+    val_t = np.zeros((r_blocks, t_tiles, eb), dtype=bool)
+    gat_t = np.zeros((r_blocks, t_tiles, eb), dtype=np.int64)
+    w_t = np.zeros((r_blocks, t_tiles, eb), dtype=np.float32) if w_r is not None else None
+    starts = np.zeros(r_blocks + 1, dtype=np.int64)
+    np.cumsum(counts, out=starts[1:])
+    for r in range(r_blocks):
+        s, e = int(starts[r]), int(starts[r + 1])
+        n = e - s
+        src_t[r].reshape(-1)[:n] = src_r[s:e]
+        dst_t[r].reshape(-1)[:n] = dst_r[s:e] - r * vb
+        val_t[r].reshape(-1)[:n] = True
+        gat_t[r].reshape(-1)[:n] = orig_idx[s:e]
+        if w_t is not None:
+            w_t[r].reshape(-1)[:n] = w_r[s:e]
+    return TileLayout(
+        src=src_t, dstb=dst_t, valid=val_t, weights=w_t, vb=vb,
+        num_rows=num_rows, gather_idx=gat_t,
+    )
+
+
+def gather_reduce(
+    payload: jnp.ndarray,
+    tiles: TileLayout,
+    *,
+    kind: str = "min",
+    edge_op: str = "none",
+    identity: float = 0.0,
+    interpret: bool = True,
+    use_reference: bool = False,
+) -> jnp.ndarray:
+    """Run the accumulator over one (core, phase) bucket."""
+    if use_reference:
+        r_blocks = tiles.src.shape[0]
+        block_base = np.arange(r_blocks, dtype=np.int32)[:, None, None] * tiles.vb
+        return gather_reduce_reference(
+            payload,
+            jnp.asarray(tiles.src).reshape(-1),
+            jnp.asarray(tiles.dstb + block_base).reshape(-1),
+            jnp.asarray(tiles.valid).reshape(-1),
+            tiles.num_rows,
+            kind=kind,
+            identity=identity,
+            weights=jnp.asarray(tiles.weights).reshape(-1)
+            if tiles.weights is not None and edge_op == "add"
+            else None,
+        )
+    return gather_reduce_pallas(
+        payload,
+        jnp.asarray(tiles.src),
+        jnp.asarray(tiles.dstb),
+        jnp.asarray(tiles.valid),
+        jnp.asarray(tiles.weights) if tiles.weights is not None else None,
+        num_rows=tiles.num_rows,
+        vb=tiles.vb,
+        kind=kind,
+        edge_op=edge_op,
+        identity=identity,
+        interpret=interpret,
+    )
+
+
+def segment_reduce_rows(
+    contrib: jnp.ndarray,  # (p, E) pre-mapped contributions (identity-padded)
+    dst: jnp.ndarray,  # (p, E) sorted local rows
+    *,
+    num_rows: int,
+    kind: str,
+    identity: float,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Reduce-only engine fallback (traced dst => no host binning): XLA path."""
+    def seg(c, d):
+        if kind == "min":
+            return jax.ops.segment_min(c, d, num_segments=num_rows, indices_are_sorted=True)
+        return jax.ops.segment_sum(c, d, num_segments=num_rows, indices_are_sorted=True)
+
+    return jax.vmap(seg)(contrib, dst)

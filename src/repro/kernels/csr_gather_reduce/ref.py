@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for the graph-core accumulator (gather + segment reduce).
+
+Defines correctness for the Pallas kernel: per destination row, reduce (min or
+sum) the mapped contributions of its incoming edges, reading source payloads
+from the gathered crossbar block.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["gather_reduce_reference"]
+
+
+def gather_reduce_reference(
+    payload: jnp.ndarray,  # (G,) gathered label block
+    src_gidx: jnp.ndarray,  # (E,) int32 into payload
+    dst_lidx: jnp.ndarray,  # (E,) int32 into output rows, sorted
+    valid: jnp.ndarray,  # (E,) bool
+    num_rows: int,
+    kind: str = "min",  # reduce UDF
+    identity: float = 0.0,
+    weights: jnp.ndarray | None = None,  # (E,) optional saturating add (SSSP)
+) -> jnp.ndarray:
+    vals = jnp.take(payload, src_gidx, axis=0)
+    if weights is not None:
+        ident = jnp.asarray(identity, vals.dtype)
+        vals = jnp.where(vals >= ident, ident, vals + weights.astype(vals.dtype))
+    vals = jnp.where(valid, vals, jnp.asarray(identity, vals.dtype))
+    if kind == "min":
+        return jax.ops.segment_min(vals, dst_lidx, num_segments=num_rows)
+    return jax.ops.segment_sum(vals, dst_lidx, num_segments=num_rows)

@@ -1,0 +1,3 @@
+from repro.kernels.embedding_bag import ops, ref  # noqa: F401
+from repro.kernels.embedding_bag.kernel import embedding_bag_pallas  # noqa: F401
+from repro.kernels.embedding_bag.ops import embedding_bag  # noqa: F401

@@ -1,0 +1,26 @@
+"""Jitted wrapper for EmbeddingBag: Pallas on TPU, XLA reference elsewhere."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.embedding_bag.kernel import embedding_bag_pallas
+from repro.kernels.embedding_bag.ref import embedding_bag_reference
+
+__all__ = ["embedding_bag"]
+
+
+def embedding_bag(
+    table: jnp.ndarray,
+    ids: jnp.ndarray,
+    *,
+    mode: str = "sum",
+    use_pallas: bool = False,
+    bags_per_tile: int = 8,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """(N, D) table x (B, L) ids (-1 pad) -> (B, D) bag embeddings."""
+    if use_pallas:
+        return embedding_bag_pallas(
+            table, ids, mode=mode, bags_per_tile=bags_per_tile, interpret=interpret
+        )
+    return embedding_bag_reference(table, ids, mode=mode)

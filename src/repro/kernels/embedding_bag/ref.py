@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for embedding_bag (gather + per-bag reduce).
+
+JAX has no native EmbeddingBag; this reference (take + masked sum/mean) is
+both the kernel oracle and the XLA fallback used inside models (DIN).
+Padding ids are negative.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["embedding_bag_reference"]
+
+
+def embedding_bag_reference(
+    table: jnp.ndarray,  # (N, D)
+    ids: jnp.ndarray,  # (B, L) int32, -1 = padding
+    mode: str = "sum",  # 'sum' | 'mean'
+    weights: jnp.ndarray | None = None,  # (B, L) per-id weights
+) -> jnp.ndarray:
+    valid = ids >= 0
+    rows = jnp.take(table, jnp.maximum(ids, 0), axis=0)  # (B, L, D)
+    w = valid.astype(table.dtype)
+    if weights is not None:
+        w = w * weights.astype(table.dtype)
+    out = jnp.einsum("bl,bld->bd", w, rows)
+    if mode == "mean":
+        cnt = jnp.maximum(valid.sum(axis=1, keepdims=True), 1).astype(table.dtype)
+        out = out / cnt
+    return out

@@ -1,0 +1,120 @@
+"""Pallas TPU kernel: causal GQA flash attention (forward).
+
+Grid (B*Hq, nQ, nKV), KV innermost ('arbitrary'); the (Bq, D) output
+accumulator and the (Bq,) online-softmax stats live in VMEM scratch that
+persists across a query block's KV tiles. Causal blocks strictly above the
+diagonal are skipped (no compute, no accumulate) via pl.when — the TPU
+analogue of not issuing work rather than masking it.
+
+GQA is expressed in the K/V BlockSpec index maps (q-head -> kv-head =
+h // group), so no repeated K/V materialization happens anywhere.
+
+This kernel is the TPU-target implementation; the model stack's XLA
+chunked-attention (models/layers.py) is its differentiable twin used for
+dry-run lowering and training.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention_pallas"]
+
+_NEG = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc, m_s, l_s, *, scale, bq, bk, causal, n_kv):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc[...])
+        m_s[...] = jnp.full_like(m_s[...], _NEG)
+        l_s[...] = jnp.zeros_like(l_s[...])
+
+    # skip fully-masked blocks above the causal diagonal
+    run = (not causal) or (ki * bk <= qi * bq + bq - 1)
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)  # (Bq, D)
+        k = k_ref[0, 0].astype(jnp.float32)  # (Bk, D)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale  # (Bq, Bk)
+        if causal:
+            qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            kpos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(qpos >= kpos, s, _NEG)
+        m_old = m_s[...]
+        m_new = jnp.maximum(m_old, s.max(axis=1))
+        alpha = jnp.exp(m_old - m_new)  # m_old starts at _NEG -> exp() == 0
+        p = jnp.exp(s - m_new[:, None])
+        l_s[...] = l_s[...] * alpha + p.sum(axis=1)
+        acc[...] = acc[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_s[...] = m_new
+
+    @pl.when(ki == n_kv - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc[...] / jnp.maximum(l_s[...], 1e-30)[:, None]).astype(
+            o_ref.dtype
+        )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "block_q", "block_k", "interpret", "scale")
+)
+def flash_attention_pallas(
+    q: jnp.ndarray,  # (B, Hq, S, D)
+    k: jnp.ndarray,  # (B, Hkv, S, D)
+    v: jnp.ndarray,  # (B, Hkv, S, D)
+    *,
+    causal: bool = True,
+    scale: float | None = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    b, hq, s, d = q.shape
+    hkv = k.shape[1]
+    group = hq // hkv
+    assert s % block_q == 0 and s % block_k == 0, (s, block_q, block_k)
+    scale = (d ** -0.5) if scale is None else scale
+    n_q, n_kv = s // block_q, s // block_k
+    grid = (b * hq, n_q, n_kv)
+
+    q_spec = pl.BlockSpec(
+        (1, 1, block_q, d), lambda bh, qi, ki: (bh // hq, bh % hq, qi, 0)
+    )
+    kv_spec = pl.BlockSpec(
+        (1, 1, block_k, d), lambda bh, qi, ki: (bh // hq, (bh % hq) // group, ki, 0)
+    )
+    kern = functools.partial(
+        _kernel, scale=scale, bq=block_q, bk=block_k, causal=causal, n_kv=n_kv
+    )
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[q_spec, kv_spec, kv_spec],
+        out_specs=q_spec,
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, d), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+        ],
+        interpret=interpret,
+        compiler_params=dict(
+            mosaic=dict(dimension_semantics=("parallel", "parallel", "arbitrary"))
+        )
+        if not interpret
+        else None,
+    )(q, k, v)

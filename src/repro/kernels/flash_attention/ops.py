@@ -1,0 +1,29 @@
+"""Jitted wrapper: flash attention (Pallas TPU target) or XLA reference."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+from repro.kernels.flash_attention.ref import gqa_attention_reference
+
+__all__ = ["flash_attention"]
+
+
+def flash_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    scale: float | None = None,
+    use_pallas: bool = False,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    if use_pallas:
+        return flash_attention_pallas(
+            q, k, v, causal=causal, scale=scale,
+            block_q=block_q, block_k=block_k, interpret=interpret,
+        )
+    return gqa_attention_reference(q, k, v, causal=causal, scale=scale)

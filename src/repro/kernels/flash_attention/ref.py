@@ -1,0 +1,28 @@
+"""Pure-jnp oracle: causal grouped-query attention (full materialization)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["gqa_attention_reference"]
+
+
+def gqa_attention_reference(
+    q: jnp.ndarray,  # (B, Hq, S, D)
+    k: jnp.ndarray,  # (B, Hkv, S, D)
+    v: jnp.ndarray,  # (B, Hkv, S, D)
+    causal: bool = True,
+    scale: float | None = None,
+) -> jnp.ndarray:
+    b, hq, s, d = q.shape
+    hkv = k.shape[1]
+    group = hq // hkv
+    scale = (d ** -0.5) if scale is None else scale
+    kk = jnp.repeat(k, group, axis=1)
+    vv = jnp.repeat(v, group, axis=1)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, kk).astype(jnp.float32) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((s, s), bool))
+        logits = jnp.where(mask[None, None], logits, -1e30)
+    w = jnp.exp(logits - logits.max(axis=-1, keepdims=True))
+    w = w / w.sum(axis=-1, keepdims=True)
+    return jnp.einsum("bhqk,bhkd->bhqd", w.astype(q.dtype), vv)

@@ -1,0 +1,3 @@
+from repro.kernels.segment_softmax import ops, ref  # noqa: F401
+from repro.kernels.segment_softmax.kernel import segment_softmax_pallas  # noqa: F401
+from repro.kernels.segment_softmax.ops import segment_softmax, segment_softmax_tiled  # noqa: F401

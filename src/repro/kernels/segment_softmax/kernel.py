@@ -1,0 +1,99 @@
+"""Pallas TPU kernels: segment softmax via online (flash-style) statistics.
+
+GAT's edge softmax normalizes attention scores over each destination vertex's
+in-edges. On an FPGA this would be another accumulator pass; on TPU we fuse it
+as two Pallas passes over the SAME (R, T, Eb) row-block tiling as the
+gather-reduce accumulator:
+
+  pass 1 (stats):    online max/sum-exp update per row block — the identical
+                     recurrence flash attention uses across KV tiles:
+                       m' = max(m, max_tile)
+                       l' = l * exp(m - m') + sum_tile(exp(s - m'))
+  pass 2 (normalize): w_e = exp(s_e - m[row]) / l[row]
+
+Both passes are (Vb, Eb) broadcast-compare VPU work with one revisited output
+block; stats stay resident in VMEM across a row block's tiles.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["segment_softmax_pallas"]
+
+_NEG = -1e30
+
+
+def _stats_kernel(score_ref, dst_ref, val_ref, m_ref, l_ref, *, vb):
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref[...], _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref[...])
+
+    s = score_ref[0, 0, :]
+    dstb = dst_ref[0, 0, :].astype(jnp.int32)
+    val = val_ref[0, 0, :]
+    eb = s.shape[0]
+    rows = jax.lax.broadcasted_iota(jnp.int32, (vb, eb), 0)
+    onehot = (rows == dstb[None, :]) & val[None, :]
+    s_mat = jnp.where(onehot, s[None, :], _NEG)  # (Vb, Eb)
+    tile_max = s_mat.max(axis=1)
+    m_old = m_ref[...]
+    m_new = jnp.maximum(m_old, tile_max)
+    # exp(m_old - m_new) with both at _NEG (untouched row) must stay 0-scale
+    scale = jnp.where(m_old <= _NEG / 2, 0.0, jnp.exp(m_old - m_new))
+    contrib = jnp.where(onehot, jnp.exp(s[None, :] - m_new[:, None]), 0.0).sum(axis=1)
+    l_ref[...] = l_ref[...] * scale + contrib
+    m_ref[...] = m_new
+
+
+def _norm_kernel(score_ref, dst_ref, val_ref, m_ref, l_ref, out_ref, *, vb):
+    s = score_ref[0, 0, :]
+    dstb = dst_ref[0, 0, :].astype(jnp.int32)
+    val = val_ref[0, 0, :]
+    m = jnp.take(m_ref[...], dstb, axis=0)
+    l = jnp.take(l_ref[...], dstb, axis=0)
+    w = jnp.exp(s - m) / jnp.maximum(l, 1e-30)
+    out_ref[0, 0, :] = jnp.where(val, w, 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("num_rows", "vb", "interpret"))
+def segment_softmax_pallas(
+    scores: jnp.ndarray,  # (R, T, Eb) f32, tile layout
+    dstb: jnp.ndarray,  # (R, T, Eb) int32 row-in-block
+    valid: jnp.ndarray,  # (R, T, Eb) bool
+    *,
+    num_rows: int,
+    vb: int,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    r_blocks, t_tiles, eb = scores.shape
+    assert r_blocks * vb == num_rows
+    edge_block = pl.BlockSpec((1, 1, eb), lambda r, t: (r, t, 0))
+    row_block = pl.BlockSpec((vb,), lambda r, t: (r,))
+
+    m, l = pl.pallas_call(
+        functools.partial(_stats_kernel, vb=vb),
+        grid=(r_blocks, t_tiles),
+        in_specs=[edge_block, edge_block, edge_block],
+        out_specs=[row_block, row_block],
+        out_shape=[
+            jax.ShapeDtypeStruct((num_rows,), jnp.float32),
+            jax.ShapeDtypeStruct((num_rows,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(scores, dstb, valid)
+
+    return pl.pallas_call(
+        functools.partial(_norm_kernel, vb=vb),
+        grid=(r_blocks, t_tiles),
+        in_specs=[edge_block, edge_block, edge_block, row_block, row_block],
+        out_specs=edge_block,
+        out_shape=jax.ShapeDtypeStruct((r_blocks, t_tiles, eb), jnp.float32),
+        interpret=interpret,
+    )(scores, dstb, valid, m, l)

@@ -1,0 +1,56 @@
+"""Wrapper: lay traced per-edge scores into the static tile layout and run
+the two-pass online segment softmax."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.csr_gather_reduce.ops import TileLayout
+from repro.kernels.segment_softmax.kernel import segment_softmax_pallas
+from repro.kernels.segment_softmax.ref import segment_softmax_reference
+
+__all__ = ["segment_softmax", "segment_softmax_tiled"]
+
+
+def segment_softmax_tiled(
+    scores_flat: jnp.ndarray,  # (E,) traced scores in ORIGINAL edge order
+    tiles: TileLayout,
+    *,
+    interpret: bool = True,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (weights in tile order (R,T,Eb), tile layout echo)."""
+    assert tiles.gather_idx is not None
+    tiled = jnp.take(scores_flat, jnp.asarray(tiles.gather_idx), axis=0)
+    w = segment_softmax_pallas(
+        tiled.astype(jnp.float32),
+        jnp.asarray(tiles.dstb),
+        jnp.asarray(tiles.valid),
+        num_rows=tiles.num_rows,
+        vb=tiles.vb,
+        interpret=interpret,
+    )
+    return w, tiled
+
+
+def segment_softmax(
+    scores: jnp.ndarray,
+    dst: jnp.ndarray,
+    valid: jnp.ndarray,
+    num_rows: int,
+    *,
+    use_pallas: bool = False,
+    tiles: TileLayout | None = None,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Per-segment softmax in ORIGINAL edge order (scatter back from tiles)."""
+    if not use_pallas:
+        return segment_softmax_reference(scores, dst, valid, num_rows)
+    assert tiles is not None and tiles.gather_idx is not None
+    w_tiled, _ = segment_softmax_tiled(scores, tiles, interpret=interpret)
+    e = scores.shape[0]
+    # padding slots are routed to a dump index e and sliced off afterwards
+    flat_val = np.asarray(tiles.valid).reshape(-1)
+    flat_idx = np.where(flat_val, np.asarray(tiles.gather_idx).reshape(-1), e)
+    out = jnp.zeros((e + 1,), jnp.float32)
+    out = out.at[jnp.asarray(flat_idx)].set(w_tiled.reshape(-1))
+    return out[:e]

@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for segment softmax (GAT edge softmax over in-edges)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["segment_softmax_reference"]
+
+_NEG = -1e30
+
+
+def segment_softmax_reference(
+    scores: jnp.ndarray,  # (E,)
+    dst: jnp.ndarray,  # (E,) segment ids
+    valid: jnp.ndarray,  # (E,) bool
+    num_rows: int,
+) -> jnp.ndarray:
+    """Numerically-stable per-segment softmax; invalid edges get weight 0."""
+    s = jnp.where(valid, scores, _NEG)
+    seg_max = jax.ops.segment_max(s, dst, num_segments=num_rows)
+    seg_max = jnp.where(seg_max <= _NEG / 2, 0.0, seg_max)  # empty rows
+    e = jnp.where(valid, jnp.exp(s - seg_max[dst]), 0.0)
+    seg_sum = jax.ops.segment_sum(e, dst, num_segments=num_rows)
+    return jnp.where(valid, e / jnp.maximum(seg_sum[dst], 1e-30), 0.0)

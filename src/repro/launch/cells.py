@@ -1,0 +1,449 @@
+"""Dry-run cell builder: (arch x shape x mesh) -> (step_fn, sharded input
+structs, out shardings, donation, analytic MODEL_FLOPS).
+
+Inputs are ``jax.ShapeDtypeStruct``s carrying NamedShardings — nothing is
+allocated; ``jit(fn).lower(*args).compile()`` is the whole proof.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeCell
+from repro.dist import sharding as shd
+from repro.models import transformer as tfm
+from repro.models.gnn import archs as gnn
+from repro.models.gnn.common import GraphBatch
+from repro.models.recsys import din as din_mod
+from repro.train import steps as steps_mod
+from repro.train.optim import AdamWConfig
+
+__all__ = ["Cell", "build_cell", "OPT_CFG"]
+
+OPT_CFG = AdamWConfig(lr=3e-4, total_steps=100_000, warmup_steps=2000)
+
+
+@dataclasses.dataclass
+class Cell:
+    key: str
+    fn: Callable
+    args: Tuple[Any, ...]
+    out_shardings: Any
+    donate_argnums: Tuple[int, ...]
+    meta: Dict[str, Any]
+
+
+def _sds(struct_tree, spec_tree, mesh):
+    """Zip eval_shape structs with PartitionSpecs -> sharded SDS tree."""
+
+    def one(s, p):
+        return jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=NamedSharding(mesh, p))
+
+    return jax.tree.map(
+        one, struct_tree, spec_tree, is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct)
+    )
+
+
+def _ns(spec_tree, mesh):
+    return jax.tree.map(
+        lambda p: NamedSharding(mesh, p), spec_tree, is_leaf=lambda x: isinstance(x, P)
+    )
+
+
+# ---------------------------------------------------------------------------
+# analytic MODEL_FLOPS (documented approximations; see DESIGN.md §8)
+# ---------------------------------------------------------------------------
+
+
+def _lm_flops(cfg: tfm.LMConfig, kind: str, batch: int, seq: int) -> float:
+    n_act = tfm.active_params(cfg)
+    if kind == "train":
+        t = batch * seq
+        attn = 12 * cfg.n_layers * batch * seq * seq * cfg.n_heads * cfg.hd // 2
+        return 6.0 * n_act * t + attn  # 6ND + causal attention term
+    if kind == "prefill":
+        t = batch * seq
+        attn = 4 * cfg.n_layers * batch * seq * seq * cfg.n_heads * cfg.hd // 2
+        return 2.0 * n_act * t + attn
+    # decode: one token per sequence against a seq-length cache
+    attn = 4.0 * cfg.n_layers * batch * cfg.n_heads * cfg.hd * seq
+    return 2.0 * n_act * batch + attn
+
+
+def _gnn_flops(arch: ArchConfig, dims: Dict[str, int], train: bool) -> float:
+    cfg: gnn.GNNConfig = arch.model
+    n, e, h = dims.get("n_nodes", 0), dims.get("n_edges", 0), cfg.d_hidden
+    f = dims.get("d_feat", 16)
+    if cfg.name in ("gin", "gcn", "sage"):
+        fwd = 2 * n * (f * h + h * h) + cfg.n_layers * (e * h + 2 * n * 2 * h * h)
+    elif cfg.name == "gat":
+        hh = h * cfg.n_heads
+        fwd = 2 * n * f * hh + 2 * (2 * n * hh * hh + 3 * e * hh) + 2 * n * hh * arch.gnn_out_dim
+    elif cfg.name == "schnet":
+        fwd = 2 * n * (f * h + h * h) + cfg.n_layers * (
+            2 * e * (cfg.rbf * h + h * h) + 2 * n * (3 * h * h) + e * h
+        )
+    else:  # meshgraphnet
+        fwd = 2 * n * (f * h + h * h) + cfg.n_layers * (
+            2 * e * (3 * h * h + h * h) + 2 * n * (2 * h * h + h * h) + e * h
+        )
+    fwd += 2 * n * (h * h + h * arch.gnn_out_dim)
+    return 3.0 * fwd if train else fwd
+
+
+def _din_flops(cfg: din_mod.DINConfig, batch: int, n_cand: int = 0, train: bool = False) -> float:
+    e = 2 * cfg.embed_dim
+    a1, a2 = cfg.attn_mlp
+    o1, o2 = cfg.out_mlp
+    per_pair = 2 * (4 * e * a1 + a1 * a2 + a2)  # attention unit per history elem
+    per_user = cfg.seq_len * per_pair + 2 * ((2 * e + cfg.embed_dim) * o1 + o1 * o2 + o2)
+    units = batch if n_cand == 0 else n_cand
+    return (3.0 if train else 1.0) * units * per_user
+
+
+# ---------------------------------------------------------------------------
+# LM cells
+# ---------------------------------------------------------------------------
+
+
+def _lm_cell(arch: ArchConfig, shape: ShapeCell, mesh) -> Cell:
+    r = shd.rules_for_mesh(mesh)
+    d = shape.dims
+    # thread mesh-specific activation constraints into the model config.
+    # Activations are SEQUENCE-sharded over the model axis (Megatron-SP
+    # style): the remat carry stack (L x (B,S,d)) shrinks by |tp| AND
+    # attention compute parallelizes over query positions even when the head
+    # count doesn't divide the axis (smollm: 9 heads vs 16-way model axis).
+    b_axis = r.axis_if(r.fsdp, d["batch"])
+    seq = d["seq"] if shape.kind != "decode" else 1
+    s_axis = r.axis_if(r.tp, seq)
+    # one dispatch group per data shard: capacity shards over fsdp instead of
+    # replicating expert GEMMs on every data replica (measured 16x overcompute
+    # + 29 GiB/dev OOM on the ungrouped iteration-0 baseline; EXPERIMENTS.md
+    # §Perf). Groups must divide the token count (decode lowers B tokens;
+    # long_500k has 1) — ungrouped cells keep the 3-D (E, C, d) constraint.
+    tokens = d["batch"] * (d["seq"] if shape.kind in ("train", "prefill") else 1)
+    moe_groups = (
+        r.size(r.fsdp)
+        if arch.model.moe is not None and tokens % r.size(r.fsdp) == 0
+        else 1
+    )
+    if arch.model.moe is None:
+        expert_sharding = None
+    else:
+        e_axis = r.axis_if(r.tp, arch.model.moe.num_experts)
+        expert_sharding = NamedSharding(
+            mesh,
+            P(r.fsdp, e_axis, None, None)  # grouped: (G, E, C, d)
+            if moe_groups > 1
+            else P(e_axis, None, None),  # ungrouped: (E, C, d)
+        )
+    cfg: tfm.LMConfig = dataclasses.replace(
+        arch.model,
+        act_sharding=NamedSharding(mesh, P(b_axis, s_axis, None)),
+        logit_sharding=NamedSharding(
+            mesh, P(b_axis, None, r.axis_if(r.tp, arch.model.vocab))
+        ),
+        attn_sharding=NamedSharding(mesh, P(b_axis, None, s_axis, None)),
+        expert_sharding=expert_sharding,
+        moe_groups=moe_groups,
+    )
+    pspecs = shd.lm_param_specs(r, cfg)
+    params_struct = jax.eval_shape(lambda: tfm.init_params(jax.random.key(0), cfg))
+
+    if shape.kind == "train":
+        sspecs = shd.state_specs(pspecs)
+        state_struct = jax.eval_shape(
+            lambda: steps_mod.init_train_state(
+                tfm.init_params(jax.random.key(0), cfg), OPT_CFG
+            )
+        )
+        state_sds = _sds(state_struct, sspecs, mesh)
+        bspecs = shd.lm_batch_specs(r, d["batch"])
+        batch_sds = {
+            k: jax.ShapeDtypeStruct(
+                (d["batch"], d["seq"]), jnp.int32, sharding=NamedSharding(mesh, v)
+            )
+            for k, v in bspecs.items()
+        }
+        fn = steps_mod.make_lm_train_step(cfg, OPT_CFG)
+        out_sh = (_ns(sspecs, mesh), {"loss": NamedSharding(mesh, P())})
+        return Cell(
+            key=f"{arch.arch_id}/{shape.name}",
+            fn=fn,
+            args=(state_sds, batch_sds),
+            out_shardings=out_sh,
+            donate_argnums=(0,),
+            meta=dict(
+                family="lm", kind="train",
+                model_flops=_lm_flops(cfg, "train", d["batch"], d["seq"]),
+                tokens=d["batch"] * d["seq"],
+                params=tfm.count_params(cfg), active_params=tfm.active_params(cfg),
+            ),
+        )
+
+    params_sds = _sds(params_struct, pspecs, mesh)
+    if shape.kind == "prefill":
+        tok_sds = jax.ShapeDtypeStruct(
+            (d["batch"], d["seq"]), jnp.int32,
+            sharding=NamedSharding(mesh, shd.lm_batch_specs(r, d["batch"])["tokens"]),
+        )
+        fn = steps_mod.make_lm_prefill(cfg)
+        logits_spec = P(r.axis_if(r.fsdp, d["batch"]), None, r.axis_if(r.tp, cfg.vocab))
+        return Cell(
+            key=f"{arch.arch_id}/{shape.name}",
+            fn=fn,
+            args=(params_sds, tok_sds),
+            out_shardings=NamedSharding(mesh, logits_spec),
+            donate_argnums=(),
+            meta=dict(
+                family="lm", kind="prefill",
+                model_flops=_lm_flops(cfg, "prefill", d["batch"], d["seq"]),
+                tokens=d["batch"] * d["seq"], params=tfm.count_params(cfg),
+            ),
+        )
+
+    # decode (decode_32k / long_500k)
+    cache_struct = jax.eval_shape(
+        lambda: tfm.init_kv_cache(cfg, d["batch"], d["seq"])
+    )
+    cspecs = shd.lm_cache_specs(r, cfg, d["batch"], d["seq"])
+    cache_sds = _sds(cache_struct, cspecs, mesh)
+    b_axis = r.axis_if(r.fsdp, d["batch"])
+    tok_sds = jax.ShapeDtypeStruct(
+        (d["batch"], 1), jnp.int32, sharding=NamedSharding(mesh, P(b_axis, None))
+    )
+    pos_sds = jax.ShapeDtypeStruct((), jnp.int32, sharding=NamedSharding(mesh, P()))
+    fn = steps_mod.make_lm_decode_step(cfg)
+    out_sh = (
+        NamedSharding(mesh, P(b_axis, r.axis_if(r.tp, cfg.vocab))),
+        _ns(cspecs, mesh),
+    )
+    return Cell(
+        key=f"{arch.arch_id}/{shape.name}",
+        fn=fn,
+        args=(params_sds, cache_sds, tok_sds, pos_sds),
+        out_shardings=out_sh,
+        donate_argnums=(1,),
+        meta=dict(
+            family="lm", kind="decode",
+            model_flops=_lm_flops(cfg, "decode", d["batch"], d["seq"]),
+            tokens=d["batch"], params=tfm.count_params(cfg),
+        ),
+    )
+
+
+# ---------------------------------------------------------------------------
+# GNN cells
+# ---------------------------------------------------------------------------
+
+
+def _gnn_batch_sds(arch: ArchConfig, d: Dict[str, int], n_graphs: int, mesh):
+    r = shd.rules_for_mesh(mesh)
+    n, e, f = d["n_nodes"], d["n_edges"], d["d_feat"]
+    specs = shd.gnn_batch_specs(r, n, e, n_graphs)
+    batch = GraphBatch(
+        node_feat=jax.ShapeDtypeStruct((n, f), jnp.float32),
+        edge_src=jax.ShapeDtypeStruct((e,), jnp.int32),
+        edge_dst=jax.ShapeDtypeStruct((e,), jnp.int32),
+        node_mask=jax.ShapeDtypeStruct((n,), jnp.bool_),
+        edge_mask=jax.ShapeDtypeStruct((e,), jnp.bool_),
+        graph_id=jax.ShapeDtypeStruct((n,), jnp.int32),
+        n_graphs=n_graphs,
+        edge_dist=jax.ShapeDtypeStruct((e,), jnp.float32),
+    )
+    return _sds(batch, specs, mesh), specs
+
+
+def _gnn_cell(arch: ArchConfig, shape: ShapeCell, mesh) -> Cell:
+    # per-layer remat is the production default: without it meshgraphnet on
+    # ogb_products holds 15 layers of edge activations (18.1 GiB/dev measured)
+    cfg: gnn.GNNConfig = (
+        arch.model if arch.model.remat else dataclasses.replace(arch.model, remat=True)
+    )
+    r = shd.rules_for_mesh(mesh)
+    d = dict(shape.dims)
+    if shape.kind == "gnn_molecule":
+        d["n_nodes"] = d["n_graphs"] * d["nodes_per"]
+        d["n_edges"] = d["n_graphs"] * d["edges_per"]
+        n_graphs = d["n_graphs"]
+        task = "graph_class"
+    else:
+        n_graphs = 1
+        task = arch.gnn_task
+    out_dim = d.get("n_classes", arch.gnn_out_dim) if task.endswith("class") else arch.gnn_out_dim
+
+    params_struct = jax.eval_shape(
+        lambda: gnn.init(jax.random.key(0), cfg, d["d_feat"], out_dim)
+    )
+    pspecs = shd.replicated_specs(params_struct)
+    sspecs = shd.state_specs(pspecs)
+    state_struct = jax.eval_shape(
+        lambda: steps_mod.init_train_state(
+            gnn.init(jax.random.key(0), cfg, d["d_feat"], out_dim), OPT_CFG
+        )
+    )
+    state_sds = _sds(state_struct, sspecs, mesh)
+    batch_sds, bspecs = _gnn_batch_sds(arch, d, n_graphs, mesh)
+
+    gaxes = r.all_axes
+    if task == "graph_class":
+        lab_sds = jax.ShapeDtypeStruct(
+            (n_graphs,), jnp.int32,
+            sharding=NamedSharding(mesh, P(r.axis_if(gaxes, n_graphs))),
+        )
+    elif task == "node_reg":
+        lab_sds = jax.ShapeDtypeStruct(
+            (d["n_nodes"], out_dim), jnp.float32,
+            sharding=NamedSharding(mesh, P(r.axis_if(gaxes, d["n_nodes"]), None)),
+        )
+    else:
+        lab_sds = jax.ShapeDtypeStruct(
+            (d["n_nodes"],), jnp.int32,
+            sharding=NamedSharding(mesh, P(r.axis_if(gaxes, d["n_nodes"]))),
+        )
+
+    loss_nodes = d.get("batch_nodes") if shape.kind == "gnn_minibatch" else None
+    fn = steps_mod.make_gnn_train_step(cfg, OPT_CFG, task=task, loss_nodes=loss_nodes)
+    out_sh = (_ns(sspecs, mesh), {"loss": NamedSharding(mesh, P())})
+    return Cell(
+        key=f"{arch.arch_id}/{shape.name}",
+        fn=fn,
+        args=(state_sds, batch_sds, lab_sds),
+        out_shardings=out_sh,
+        donate_argnums=(0,),
+        meta=dict(
+            family="gnn", kind=shape.kind, task=task,
+            model_flops=_gnn_flops(arch, d, train=True),
+            edges=d["n_edges"], nodes=d["n_nodes"],
+        ),
+    )
+
+
+# ---------------------------------------------------------------------------
+# RecSys cells
+# ---------------------------------------------------------------------------
+
+
+def _din_batch_sds(cfg: din_mod.DINConfig, batch: int, mesh, with_labels: bool):
+    r = shd.rules_for_mesh(mesh)
+    specs = shd.din_batch_specs(r, batch)
+    tree = {
+        "hist_items": jax.ShapeDtypeStruct((batch, cfg.seq_len), jnp.int32),
+        "hist_cates": jax.ShapeDtypeStruct((batch, cfg.seq_len), jnp.int32),
+        "target_item": jax.ShapeDtypeStruct((batch,), jnp.int32),
+        "target_cate": jax.ShapeDtypeStruct((batch,), jnp.int32),
+        "profile_bag": jax.ShapeDtypeStruct((batch, cfg.profile_bag_len), jnp.int32),
+    }
+    if with_labels:
+        tree["labels"] = jax.ShapeDtypeStruct((batch,), jnp.float32)
+    specs = {k: specs[k] for k in tree}
+    return _sds(tree, specs, mesh)
+
+
+def _din_cell(arch: ArchConfig, shape: ShapeCell, mesh) -> Cell:
+    cfg: din_mod.DINConfig = arch.model
+    # training prefers the FULL crossbar: table grads + Adam moments shard
+    # over the whole mesh, eliminating the fsdp gradient all-reduce
+    # (20.6x collective reduction measured; serving keeps the tp-crossbar
+    # whose per-lookup overhead is lower). §Perf it2.
+    if shape.kind == "serve_train" and cfg.lookup == "crossbar":
+        cfg = dataclasses.replace(cfg, lookup="crossbar_full")
+    r = shd.rules_for_mesh(mesh)
+    d = shape.dims
+    pspecs = shd.din_param_specs(r, cfg)
+    params_struct = jax.eval_shape(lambda: din_mod.init(jax.random.key(0), cfg))
+    lookup_fn = None
+    if cfg.lookup == "crossbar":
+        from repro.dist.embedding import make_crossbar_lookup
+
+        # ids sharded over the whole mesh; each model-axis group exchanges
+        # requests/responses with its 16 table shards (DESIGN.md §2.2)
+        lookup_fn = make_crossbar_lookup(
+            mesh, table_axis=r.tp, batch_axes=r.all_axes, capacity_factor=2.0
+        )
+    elif cfg.lookup == "crossbar_full":
+        from repro.dist.embedding import make_crossbar_lookup
+
+        # full two-level crossbar: unique row shard per device; table grads
+        # and Adam moments are fully sharded (no fsdp all-reduce)
+        lookup_fn = make_crossbar_lookup(
+            mesh, table_axis=r.all_axes, batch_axes=r.all_axes, capacity_factor=2.0
+        )
+
+    if shape.kind == "serve_train":
+        sspecs = shd.state_specs(pspecs)
+        state_struct = jax.eval_shape(
+            lambda: steps_mod.init_train_state(din_mod.init(jax.random.key(0), cfg), OPT_CFG)
+        )
+        state_sds = _sds(state_struct, sspecs, mesh)
+        batch_sds = _din_batch_sds(cfg, d["batch"], mesh, with_labels=True)
+        fn = steps_mod.make_din_train_step(cfg, OPT_CFG, lookup_fn=lookup_fn)
+        return Cell(
+            key=f"{arch.arch_id}/{shape.name}",
+            fn=fn,
+            args=(state_sds, batch_sds),
+            out_shardings=(_ns(sspecs, mesh), {"loss": NamedSharding(mesh, P())}),
+            donate_argnums=(0,),
+            meta=dict(family="recsys", kind="train",
+                      model_flops=_din_flops(cfg, d["batch"], train=True)),
+        )
+
+    params_sds = _sds(params_struct, pspecs, mesh)
+    if shape.kind == "serve":
+        batch_sds = _din_batch_sds(cfg, d["batch"], mesh, with_labels=False)
+        fn = steps_mod.make_din_serve(cfg, lookup_fn=lookup_fn)
+        b = r.axis_if(r.all_axes, d["batch"]) or r.axis_if(r.fsdp, d["batch"])
+        return Cell(
+            key=f"{arch.arch_id}/{shape.name}",
+            fn=fn,
+            args=(params_sds, batch_sds),
+            out_shardings=NamedSharding(mesh, P(b)),
+            donate_argnums=(),
+            meta=dict(family="recsys", kind="serve",
+                      model_flops=_din_flops(cfg, d["batch"])),
+        )
+
+    # retrieval: one user, n_candidates items (vectorized, no chunk loop)
+    rspecs = shd.din_retrieval_specs(r, d["n_candidates"])
+    tree = {
+        "hist_items": jax.ShapeDtypeStruct((1, cfg.seq_len), jnp.int32),
+        "hist_cates": jax.ShapeDtypeStruct((1, cfg.seq_len), jnp.int32),
+        "profile_bag": jax.ShapeDtypeStruct((1, cfg.profile_bag_len), jnp.int32),
+        "cand_items": jax.ShapeDtypeStruct((d["n_candidates"],), jnp.int32),
+        "cand_cates": jax.ShapeDtypeStruct((d["n_candidates"],), jnp.int32),
+    }
+    batch_sds = _sds(tree, {k: rspecs[k] for k in tree}, mesh)
+    fn = steps_mod.make_din_retrieval(cfg, chunk=None)
+    c = r.axis_if(r.all_axes, d["n_candidates"])
+    return Cell(
+        key=f"{arch.arch_id}/{shape.name}",
+        fn=fn,
+        args=(params_sds, batch_sds),
+        out_shardings=NamedSharding(mesh, P(c)),
+        donate_argnums=(),
+        meta=dict(family="recsys", kind="retrieval",
+                  model_flops=_din_flops(cfg, 1, n_cand=d["n_candidates"])),
+    )
+
+
+def build_cell(
+    arch: ArchConfig,
+    shape_name: str,
+    mesh,
+    model_overrides: Optional[Dict[str, Any]] = None,
+) -> Cell:
+    shape = arch.shape(shape_name)
+    if model_overrides:
+        arch = dataclasses.replace(
+            arch, model=dataclasses.replace(arch.model, **model_overrides)
+        )
+    if arch.family == "lm":
+        return _lm_cell(arch, shape, mesh)
+    if arch.family == "gnn":
+        return _gnn_cell(arch, shape, mesh)
+    return _din_cell(arch, shape, mesh)

@@ -1,0 +1,184 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell with
+ShapeDtypeStruct inputs (no allocation), prove memory fit, and extract the
+roofline terms.
+
+MUST be run as its own process (the XLA_FLAGS line above executes before any
+jax import — 512 host devices exist only here, never in tests/benchmarks).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun                 # all 40 cells x 2 meshes
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-8b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --mesh multi --out results/dryrun
+"""
+import argparse  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro.configs.registry import ARCHS  # noqa: E402
+from repro.launch.cells import build_cell  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.roofline import collective_bytes, roofline_report  # noqa: E402
+
+
+def _compile(cell, mesh):
+    with mesh:
+        lowered = jax.jit(
+            cell.fn,
+            out_shardings=cell.out_shardings,
+            donate_argnums=cell.donate_argnums,
+        ).lower(*cell.args)
+        compiled = lowered.compile()
+    return compiled
+
+
+def _layer_count(arch) -> int:
+    return arch.model.n_layers
+
+
+def _has_layer_scan(arch) -> bool:
+    if arch.family == "recsys":
+        return False
+    if arch.family == "gnn" and arch.model.name == "gat":
+        return False  # two explicit layers, no scan: costs are exact
+    return True
+
+
+def run_cell(arch_id: str, shape_name: str, mesh_name: str, out_dir: str,
+             model_overrides=None, tag: str = "") -> dict:
+    """Three compiles per cell:
+      1. the REAL program (rolled scans): the deliverable compile; its
+         memory_analysis() is the per-device fit proof.
+      2./3. probe compiles with n_layers=1 and n_layers=2, scans unrolled:
+         XLA cost_analysis counts while-loop bodies ONCE regardless of trip
+         count (measured), so honest FLOP/byte/collective totals come from the
+         exact linear reconstruction  total(L) = const + L * per_layer.
+    Validated against a fully-unrolled compile (EXPERIMENTS.md §Dry-run)."""
+    arch = ARCHS[arch_id]
+    mesh = make_production_mesh(multi_pod=(mesh_name == "multi"))
+    chips = mesh.size
+
+    t0 = time.time()
+    cell = build_cell(arch, shape_name, mesh, model_overrides=model_overrides)
+    compiled = _compile(cell, mesh)
+    t_compile = time.time() - t0
+    mem = compiled.memory_analysis()  # proves per-device fit
+    rolled_cost = compiled.cost_analysis()
+
+    if _has_layer_scan(arch):
+        probes = {}
+        for lcount in (1, 2):
+            ovr = dict(model_overrides or {})
+            ovr.update(n_layers=lcount, scan_unroll=True)
+            pc = build_cell(arch, shape_name, mesh, model_overrides=ovr)
+            pcomp = _compile(pc, mesh)
+            probes[lcount] = (
+                pcomp.cost_analysis(),
+                collective_bytes(pcomp.as_text(), chips),
+            )
+        L = _layer_count(arch)
+
+        def fit(v1, v2):
+            per_layer = v2 - v1
+            return max(v1 - per_layer, 0.0) + L * per_layer
+
+        cost = {
+            "flops": fit(probes[1][0].get("flops", 0.0), probes[2][0].get("flops", 0.0)),
+            "bytes accessed": fit(
+                probes[1][0].get("bytes accessed", 0.0),
+                probes[2][0].get("bytes accessed", 0.0),
+            ),
+        }
+        coll_total = fit(
+            probes[1][1]["total_wire_bytes_per_device"],
+            probes[2][1]["total_wire_bytes_per_device"],
+        )
+        coll = {
+            "total_wire_bytes_per_device": coll_total,
+            "bytes_by_kind": {
+                k: fit(probes[1][1]["bytes_by_kind"][k], probes[2][1]["bytes_by_kind"][k])
+                for k in probes[1][1]["bytes_by_kind"]
+            },
+            "count_by_kind": probes[2][1]["count_by_kind"],
+            "method": "linear-reconstruction L=1,2 probes (scan bodies costed once)",
+        }
+    else:
+        cost = rolled_cost
+        coll = collective_bytes(compiled.as_text(), chips)
+        coll["method"] = "exact (no layer scan)"
+
+    terms = roofline_report(
+        key=cell.key,
+        mesh_name=mesh_name,
+        chips=chips,
+        cost=cost,
+        coll=coll,
+        model_flops=cell.meta.get("model_flops", 0.0),
+        memory_stats=mem,
+        extras={"meta": {k: v for k, v in cell.meta.items() if isinstance(v, (int, float, str))},
+                "compile_s": t_compile,
+                "rolled_flops_per_device": float(rolled_cost.get("flops", 0.0))},
+    )
+    rec = terms.to_dict()
+    rec["memory_analysis"] = {
+        "argument_bytes": mem.argument_size_in_bytes,
+        "output_bytes": mem.output_size_in_bytes,
+        "temp_bytes": mem.temp_size_in_bytes,
+        "alias_bytes": mem.alias_size_in_bytes,
+        "generated_code_bytes": mem.generated_code_size_in_bytes,
+    }
+    rec["collectives"] = coll
+    rec["status"] = "ok"
+    os.makedirs(out_dir, exist_ok=True)
+    suffix = f"__{tag}" if tag else ""
+    fname = f"{arch_id}__{shape_name}__{mesh_name}{suffix}.json".replace("/", "_")
+    with open(os.path.join(out_dir, fname), "w") as f:
+        json.dump(rec, f, indent=1)
+    print(
+        f"[OK] {cell.key} mesh={mesh_name} chips={chips} "
+        f"compile={t_compile:.1f}s flops/dev={terms.flops_per_device:.3e} "
+        f"bytes/dev={terms.bytes_per_device:.3e} coll/dev={terms.collective_bytes_per_device:.3e} "
+        f"dominant={terms.dominant} "
+        f"mem/dev={(rec['memory_analysis']['argument_bytes'] + rec['memory_analysis']['temp_bytes'])/2**30:.2f}GiB",
+        flush=True,
+    )
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="arch id (default: all)")
+    ap.add_argument("--shape", default=None, help="shape name (default: all)")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="results/dryrun")
+    args = ap.parse_args()
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    arch_ids = [args.arch] if args.arch else list(ARCHS)
+    failures = []
+    n_ok = 0
+    for arch_id in arch_ids:
+        arch = ARCHS[arch_id]
+        shape_names = [args.shape] if args.shape else [s.name for s in arch.shapes]
+        for shape_name in shape_names:
+            for mesh_name in meshes:
+                try:
+                    run_cell(arch_id, shape_name, mesh_name, args.out)
+                    n_ok += 1
+                except Exception as e:  # noqa: BLE001
+                    failures.append((arch_id, shape_name, mesh_name, repr(e)))
+                    print(f"[FAIL] {arch_id}/{shape_name} mesh={mesh_name}: {e}", flush=True)
+                    traceback.print_exc()
+    print(f"\ndry-run complete: {n_ok} ok, {len(failures)} failed")
+    for f in failures:
+        print("  FAILED:", *f[:3], "--", f[3][:200])
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Production mesh definitions.
+
+Single pod: (data=16, model=16) = 256 chips (TPU v5e pod slice).
+Multi-pod:  (pod=2, data=16, model=16) = 512 chips; the 'pod' axis crosses
+the slow inter-pod links and is used for data parallelism only (DESIGN.md §5).
+
+``make_production_mesh`` is a function (never a module-level constant) so
+importing this module touches no jax device state — the dry-run must set
+XLA_FLAGS before anything initializes the backend.
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_graph_mesh", "HW"]
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_graph_mesh(num_cores: int, axis: str = "graph") -> jax.sharding.Mesh:
+    """Flat mesh for the GraphScale engine (one axis of graph cores)."""
+    return jax.make_mesh(
+        (num_cores,), (axis,), axis_types=(jax.sharding.AxisType.Auto,)
+    )
+
+
+class HW:
+    """TPU v5e-class roofline constants (per chip), per the assignment."""
+
+    PEAK_FLOPS_BF16 = 197e12  # FLOP/s
+    HBM_BW = 819e9  # B/s
+    ICI_BW = 50e9  # B/s per chip (one ~50 GB/s link budget, conservative)
+    HBM_BYTES = 16 * 1024**3

@@ -1,0 +1,107 @@
+"""Render EXPERIMENTS.md §Dry-run and §Roofline tables from dry-run records.
+
+    PYTHONPATH=src python -m repro.launch.report > results/roofline.md
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import List
+
+
+def load(out_dir: str = "results/dryrun") -> List[dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def dryrun_table(recs: List[dict]) -> str:
+    lines = [
+        "| cell | mesh | chips | compile s | bytes/dev (arg+tmp) GiB | fits 16G | "
+        "FLOPs/dev | HLO bytes/dev | coll bytes/dev | collective mix |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in sorted(recs, key=lambda r: (r["key"], r["mesh"])):
+        ma = r["memory_analysis"]
+        dev_gib = (ma["argument_bytes"] + ma["temp_bytes"]) / 2**30
+        mix = ", ".join(
+            f"{k.split('-')[-1] if False else k}:{int(v)}"
+            for k, v in r["collectives"]["count_by_kind"].items()
+            if v
+        ) or "none"
+        lines.append(
+            f"| {r['key']} | {r['mesh']} | {r['chips']} | "
+            f"{r['extras']['compile_s']:.1f} | {dev_gib:.2f} | "
+            f"{'Y' if dev_gib <= 16 else 'NO'} | {r['flops_per_device']:.2e} | "
+            f"{r['bytes_per_device']:.2e} | {r['collective_bytes_per_device']:.2e} | {mix} |"
+        )
+    return "\n".join(lines)
+
+
+def _lever(r: dict) -> str:
+    """One sentence: what would move this cell's dominant term down."""
+    key, dom = r["key"], r["dominant"]
+    arch = key.split("/")[0]
+    shape = key.split("/")[1]
+    is_lm = arch in ("qwen3-14b", "smollm-135m", "llama3-8b",
+                     "granite-moe-1b-a400m", "qwen3-moe-30b-a3b")
+    is_gnn = arch in ("meshgraphnet", "schnet", "gat-cora", "gin-tu",
+                      "gcn-cora", "graphsage")
+    if dom == "memory":
+        if is_lm and shape in ("train_4k", "prefill_32k"):
+            return ("flip use_pallas flash attention on TPU: the f32 "
+                    "online-softmax working set (~55% of bytes) stays in VMEM")
+        if is_lm:
+            return "KV-cache layout/quantization (bf16->int8 cache halves reads)"
+        if is_gnn:
+            return "fuse gather+segment ops via the csr_gather_reduce kernel tiles"
+        return "batch the per-user attention MLP into wider GEMMs"
+    if dom == "collective":
+        if is_lm and shape == "train_4k":
+            return "remaining AR/AG is FSDP param movement: overlap with compute (latency-hiding scheduler) or int8 grads on the pod axis"
+        if is_lm:
+            return "shard KV heads instead of sequence where divisible"
+        if is_gnn:
+            return "owner-computes GraphScale layout (measured 3.7x on gat; dist/gnn_parallel + gat_parallel)"
+        return "crossbar exchange instead of GSPMD table all-gather (measured 46x)"
+    return "increase per-chip work (larger microbatch) to amortize"
+
+
+def roofline_table(recs: List[dict], mesh: str) -> str:
+    lines = [
+        "| cell | compute s | memory s | collective s | dominant | MODEL_FLOPs | "
+        "HLO FLOPs (total) | useful | what moves the dominant term |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in sorted(recs, key=lambda r: r["key"]):
+        if r["mesh"] != mesh:
+            continue
+        dom = r["dominant"]
+        lines.append(
+            f"| {r['key']} | {r['compute_s']:.2e} | {r['memory_s']:.2e} | "
+            f"{r['collective_s']:.2e} | **{dom}** | {r['model_flops']:.2e} | "
+            f"{r['hlo_flops_total']:.2e} | {r['useful_ratio']:.3f} | {_lever(r)} |"
+        )
+    return "\n".join(lines)
+
+
+def main():
+    recs = load()
+    print(f"<!-- {len(recs)} dry-run records -->\n")
+    print("### Dry-run (all cells, both meshes)\n")
+    print(dryrun_table(recs))
+    for mesh in ("single", "multi"):
+        print(f"\n### Roofline — mesh={mesh}\n")
+        print(roofline_table(recs, mesh))
+    # summary stats
+    doms = {}
+    for r in recs:
+        doms[r["dominant"]] = doms.get(r["dominant"], 0) + 1
+    print(f"\ndominant-term distribution: {doms}")
+
+
+if __name__ == "__main__":
+    main()

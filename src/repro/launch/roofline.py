@@ -1,0 +1,174 @@
+"""Roofline term extraction from compiled dry-run artifacts.
+
+  compute    = HLO_FLOPs_per_device / PEAK_FLOPS
+  memory     = HLO_bytes_per_device / HBM_BW
+  collective = collective_wire_bytes_per_device / ICI_BW
+
+``cost_analysis()`` is per-device for SPMD executables (verified against
+hand-counted einsums). Collective bytes are parsed from the compiled HLO
+text — XLA does not report them in cost_analysis — with per-kind wire-cost
+factors for a ring/torus:
+
+  all-gather      output_bytes * (n-1)/n       (each device receives n-1 shards)
+  reduce-scatter  input_bytes  * (n-1)/n
+  all-reduce      2 * bytes * (n-1)/n          (RS + AG)
+  all-to-all      bytes * (n-1)/n
+  collective-permute  bytes
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Any, Dict, List, Optional
+
+from repro.launch.mesh import HW
+
+__all__ = ["collective_bytes", "roofline_report", "RooflineTerms"]
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+# matches e.g. "f32[16,1088]{1,0}" or "bf16[2,4096]" or "(f32[8]{0}, f32[8]{0})"
+_SHAPE_RE = re.compile(r"(pred|[suf]\d+|bf16|c64|c128)\[([\d,]*)\]")
+
+_COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(text):
+        dt, dims = m.group(1), m.group(2)
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+def _replica_group_size(line: str, default: int) -> int:
+    m = re.search(r"replica_groups=\{\{([^}]*)\}", line)
+    if m:
+        return len(m.group(1).split(","))
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+    if m:  # iota replica groups [num_groups, group_size]
+        return int(m.group(2))
+    return default
+
+
+def collective_bytes(hlo_text: str, num_devices: int) -> Dict[str, Any]:
+    """Scan the (per-device SPMD) HLO for collective ops; return wire bytes
+    per device, per kind, plus op counts."""
+    per_kind_bytes: Dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
+    per_kind_count: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        m = re.match(r"(?:ROOT )?%?[\w.\-]+ = (.*?) (all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)(?:-start)?\(", stripped)
+        if not m:
+            continue
+        out_shape_txt, kind = m.group(1), m.group(2)
+        if "-done" in stripped.split("(")[0]:
+            continue
+        n = _replica_group_size(stripped, num_devices)
+        if n <= 1:
+            continue
+        out_bytes = _shape_bytes(out_shape_txt)
+        frac = (n - 1) / n
+        if kind == "all-gather":
+            wire = out_bytes * frac
+        elif kind == "reduce-scatter":
+            wire = out_bytes * (n - 1)  # out is 1/n of input; wire = in*(n-1)/n
+        elif kind == "all-reduce":
+            wire = 2 * out_bytes * frac
+        elif kind == "all-to-all":
+            wire = out_bytes * frac
+        else:  # collective-permute
+            wire = out_bytes
+        per_kind_bytes[kind] += wire
+        per_kind_count[kind] += 1
+    total = sum(per_kind_bytes.values())
+    return {
+        "total_wire_bytes_per_device": total,
+        "bytes_by_kind": per_kind_bytes,
+        "count_by_kind": per_kind_count,
+    }
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    key: str
+    mesh: str
+    chips: int
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes_per_device: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: float
+    hlo_flops_total: float
+    useful_ratio: float
+    memory_per_device_bytes: Optional[float] = None
+    extras: Optional[Dict] = None
+
+    def to_dict(self):
+        return dataclasses.asdict(self)
+
+
+def roofline_report(
+    key: str,
+    mesh_name: str,
+    chips: int,
+    cost: Dict[str, float],
+    coll: Dict[str, Any],
+    model_flops: float,
+    memory_stats=None,
+    extras: Optional[Dict] = None,
+) -> RooflineTerms:
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    cw = float(coll["total_wire_bytes_per_device"])
+    compute_s = flops / HW.PEAK_FLOPS_BF16
+    memory_s = byts / HW.HBM_BW
+    coll_s = cw / HW.ICI_BW
+    dominant = max(
+        [("compute", compute_s), ("memory", memory_s), ("collective", coll_s)],
+        key=lambda kv: kv[1],
+    )[0]
+    hlo_total = flops * chips
+    mem_bytes = None
+    if memory_stats is not None:
+        mem_bytes = float(
+            memory_stats.argument_size_in_bytes
+            + memory_stats.output_size_in_bytes
+            + memory_stats.temp_size_in_bytes
+            - memory_stats.alias_size_in_bytes
+        )
+    return RooflineTerms(
+        key=key,
+        mesh=mesh_name,
+        chips=chips,
+        flops_per_device=flops,
+        bytes_per_device=byts,
+        collective_bytes_per_device=cw,
+        compute_s=compute_s,
+        memory_s=memory_s,
+        collective_s=coll_s,
+        dominant=dominant,
+        model_flops=model_flops,
+        hlo_flops_total=hlo_total,
+        useful_ratio=(model_flops / hlo_total) if hlo_total else 0.0,
+        memory_per_device_bytes=mem_bytes,
+        extras=extras,
+    )

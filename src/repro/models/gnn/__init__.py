@@ -1,0 +1,1 @@
+from repro.models.gnn import archs, common  # noqa: F401

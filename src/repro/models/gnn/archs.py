@@ -1,0 +1,259 @@
+"""GNN architectures on the segment-ops substrate.
+
+Assigned four:
+  gin-tu        [arXiv:1810.00826]  5 layers, hidden 64, sum agg, learnable eps
+  gat-cora      [arXiv:1710.10903]  2 layers, hidden 8 x 8 heads, attn agg
+  schnet        [arXiv:1706.08566]  3 interactions, hidden 64, rbf 300, cutoff 10
+  meshgraphnet  [arXiv:2010.03409]  15 layers, hidden 128, sum agg, 2-layer MLPs
+Extra pool archs (beyond assignment):
+  gcn           [arXiv:1609.02907]  sym-normalized SpMM conv
+  sage          [arXiv:1706.02216]  GraphSAGE mean aggregator
+
+Uniform interface: ``init(rng, cfg, in_dim, out_dim)`` / ``apply(params,
+batch, cfg)`` -> (N, out_dim) node outputs; graph-level tasks pool with
+``graph_readout``. Homogeneous layer stacks are scanned (static HLO size).
+
+All message passing routes through ``aggregate`` (take + segment reduce): the
+same pull-based gather/reduce the GraphScale engine distributes; the
+distributed variants live in dist/gnn_parallel.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.gnn.common import GraphBatch, aggregate, init_mlp, mlp, segment_softmax_xla
+
+__all__ = ["GNNConfig", "init", "apply", "graph_readout"]
+
+
+@dataclasses.dataclass(frozen=True)
+class GNNConfig:
+    name: str  # 'gin' | 'gat' | 'schnet' | 'meshgraphnet'
+    n_layers: int
+    d_hidden: int
+    n_heads: int = 1
+    aggregator: str = "sum"
+    mlp_layers: int = 2
+    rbf: int = 0  # schnet radial basis size
+    cutoff: float = 10.0
+    eps_learnable: bool = True
+    dtype: Any = jnp.float32
+    scan_unroll: bool = False  # dry-run: make cost_analysis count every layer
+    remat: bool = False  # checkpoint each layer (bounds the bwd carry stack)
+
+
+# ---------------------------------------------------------------------------
+
+
+def init(rng, cfg: GNNConfig, in_dim: int, out_dim: int) -> Dict[str, Any]:
+    k_in, k_layers, k_out = jax.random.split(rng, 3)
+    h = cfg.d_hidden
+    if cfg.name == "gin":
+        def layer(k):
+            return {
+                "mlp": init_mlp(k, [h, h, h], cfg.dtype),
+                "eps": jnp.zeros((), cfg.dtype),
+            }
+    elif cfg.name == "gat":
+        # layer sizes differ (concat heads) -> explicit 2 layers, no scan
+        hd = h  # per-head dim
+        k1, k2 = jax.random.split(k_layers)
+        params = {
+            "encoder": init_mlp(k_in, [in_dim, hd * cfg.n_heads], cfg.dtype),
+            "l1_w": (jax.random.normal(k1, (hd * cfg.n_heads, cfg.n_heads, hd)) * (h * cfg.n_heads) ** -0.5).astype(cfg.dtype),
+            "l1_asrc": jnp.zeros((cfg.n_heads, hd), cfg.dtype),
+            "l1_adst": jnp.zeros((cfg.n_heads, hd), cfg.dtype),
+            "l2_w": (jax.random.normal(k2, (hd * cfg.n_heads, 1, out_dim)) * (hd * cfg.n_heads) ** -0.5).astype(cfg.dtype),
+            "l2_asrc": jnp.zeros((1, out_dim), cfg.dtype),
+            "l2_adst": jnp.zeros((1, out_dim), cfg.dtype),
+        }
+        return params
+    elif cfg.name == "schnet":
+        def layer(k):
+            ka, kb, kc = jax.random.split(k, 3)
+            return {
+                "filter": init_mlp(ka, [cfg.rbf, h, h], cfg.dtype),
+                "in_proj": init_mlp(kb, [h, h], cfg.dtype),
+                "out_mlp": init_mlp(kc, [h, h, h], cfg.dtype),
+            }
+    elif cfg.name == "meshgraphnet":
+        def layer(k):
+            ke, kn = jax.random.split(k)
+            sizes = [h] * cfg.mlp_layers
+            return {
+                "edge_mlp": init_mlp(ke, [3 * h] + sizes, cfg.dtype, layer_norm=True),
+                "node_mlp": init_mlp(kn, [2 * h] + sizes, cfg.dtype, layer_norm=True),
+            }
+    elif cfg.name == "gcn":
+        def layer(k):
+            return {"w": init_mlp(k, [h, h], cfg.dtype)}
+    elif cfg.name == "sage":
+        def layer(k):
+            ks, kn = jax.random.split(k)
+            return {
+                "w_self": init_mlp(ks, [h, h], cfg.dtype),
+                "w_neigh": init_mlp(kn, [h, h], cfg.dtype),
+            }
+    else:
+        raise ValueError(cfg.name)
+
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    stacked = jax.vmap(layer)(layer_keys)
+    params = {
+        "encoder": init_mlp(k_in, [in_dim, h, h], cfg.dtype, layer_norm=(cfg.name == "meshgraphnet")),
+        "layers": stacked,
+        "decoder": init_mlp(k_out, [h, h, out_dim], cfg.dtype),
+    }
+    if cfg.name == "meshgraphnet":
+        k_eenc = jax.random.fold_in(k_in, 1)
+        params["edge_encoder"] = init_mlp(k_eenc, [1, h, h], cfg.dtype, layer_norm=True)
+    return params
+
+
+# ---------------------------------------------------------------------------
+
+
+def _gin_apply(params, b: GraphBatch, cfg: GNNConfig):
+    h = mlp(params["encoder"], b.node_feat)
+
+    def layer(h, lp):
+        msgs = jnp.take(h, b.edge_src, axis=0)
+        agg = aggregate(msgs, b.edge_dst, b.num_nodes, "sum", b.edge_mask)
+        h = mlp(lp["mlp"], (1.0 + lp["eps"]) * h + agg, final_act=True)
+        return h, None
+
+    if cfg.remat:
+        layer = jax.checkpoint(layer, policy=jax.checkpoint_policies.nothing_saveable)
+    h, _ = jax.lax.scan(layer, h, params["layers"], unroll=cfg.n_layers if cfg.scan_unroll else 1)
+    return mlp(params["decoder"], h)
+
+
+def _gat_layer(x, w, a_src, a_dst, b: GraphBatch, final: bool):
+    # x (N, Din); w (Din, H, hd); scores via additive attention per head
+    xp = jnp.einsum("nd,dhf->nhf", x, w)  # (N, H, hd)
+    s_src = (xp * a_src[None]).sum(-1)  # (N, H)
+    s_dst = (xp * a_dst[None]).sum(-1)
+    e = jax.nn.leaky_relu(
+        jnp.take(s_src, b.edge_src, axis=0) + jnp.take(s_dst, b.edge_dst, axis=0),
+        negative_slope=0.2,
+    )  # (E, H)
+    att = jax.vmap(
+        lambda sc: segment_softmax_xla(sc, b.edge_dst, b.edge_mask, b.num_nodes),
+        in_axes=1, out_axes=1,
+    )(e)  # (E, H)
+    msgs = jnp.take(xp, b.edge_src, axis=0) * att[..., None]  # (E, H, hd)
+    out = aggregate(msgs.reshape(msgs.shape[0], -1), b.edge_dst, b.num_nodes, "sum", b.edge_mask)
+    out = out.reshape(x.shape[0], att.shape[1], -1)  # (N, H, hd)
+    if final:
+        return out.mean(axis=1)  # average heads (GAT output layer)
+    return jax.nn.elu(out.reshape(x.shape[0], -1))  # concat heads
+
+
+def _gat_apply(params, b: GraphBatch, cfg: GNNConfig):
+    x = mlp(params["encoder"], b.node_feat)
+    x = _gat_layer(x, params["l1_w"], params["l1_asrc"], params["l1_adst"], b, final=False)
+    return _gat_layer(x, params["l2_w"], params["l2_asrc"], params["l2_adst"], b, final=True)
+
+
+def _schnet_rbf(dist, n_rbf, cutoff):
+    centers = jnp.linspace(0.0, cutoff, n_rbf)
+    gamma = 10.0
+    return jnp.exp(-gamma * jnp.square(dist[:, None] - centers[None, :]))
+
+
+def _schnet_apply(params, b: GraphBatch, cfg: GNNConfig):
+    h = mlp(params["encoder"], b.node_feat)
+    dist = b.edge_dist if b.edge_dist is not None else jnp.ones_like(b.edge_src, jnp.float32)
+    rbf = _schnet_rbf(dist, cfg.rbf, cfg.cutoff)  # (E, rbf)
+
+    def layer(h, lp):
+        w = mlp(lp["filter"], rbf)  # (E, h) continuous-filter weights
+        src_h = mlp(lp["in_proj"], h)
+        msgs = jnp.take(src_h, b.edge_src, axis=0) * w
+        agg = aggregate(msgs, b.edge_dst, b.num_nodes, "sum", b.edge_mask)
+        h = h + mlp(lp["out_mlp"], agg)  # residual interaction block
+        return h, None
+
+    if cfg.remat:
+        layer = jax.checkpoint(layer, policy=jax.checkpoint_policies.nothing_saveable)
+    h, _ = jax.lax.scan(layer, h, params["layers"], unroll=cfg.n_layers if cfg.scan_unroll else 1)
+    return mlp(params["decoder"], h)
+
+
+def _mgn_apply(params, b: GraphBatch, cfg: GNNConfig):
+    h = mlp(params["encoder"], b.node_feat)
+    ef = b.edge_dist[:, None] if b.edge_dist is not None else jnp.ones((b.num_edges, 1), cfg.dtype)
+    e = mlp(params["edge_encoder"], ef)
+
+    def layer(carry, lp):
+        h, e = carry
+        src = jnp.take(h, b.edge_src, axis=0)
+        dst = jnp.take(h, b.edge_dst, axis=0)
+        e = e + mlp(lp["edge_mlp"], jnp.concatenate([e, src, dst], axis=-1))
+        agg = aggregate(e, b.edge_dst, b.num_nodes, cfg.aggregator, b.edge_mask)
+        h = h + mlp(lp["node_mlp"], jnp.concatenate([h, agg], axis=-1))
+        return (h, e), None
+
+    if cfg.remat:
+        layer = jax.checkpoint(layer, policy=jax.checkpoint_policies.nothing_saveable)
+    (h, e), _ = jax.lax.scan(layer, (h, e), params["layers"], unroll=cfg.n_layers if cfg.scan_unroll else 1)
+    return mlp(params["decoder"], h)
+
+
+def _gcn_apply(params, b: GraphBatch, cfg: GNNConfig):
+    h = mlp(params["encoder"], b.node_feat)
+    ones = b.edge_mask.astype(jnp.float32)
+    deg = jax.ops.segment_sum(ones, b.edge_dst, num_segments=b.num_nodes) + 1.0
+    deg_src = jax.ops.segment_sum(ones, b.edge_src, num_segments=b.num_nodes) + 1.0
+    # symmetric normalization 1/sqrt(d_i d_j) with implicit self loop
+    norm = jax.lax.rsqrt(jnp.take(deg_src, b.edge_src) * jnp.take(deg, b.edge_dst))
+
+    def layer(h, lp):
+        msgs = jnp.take(h, b.edge_src, axis=0) * norm[:, None]
+        agg = aggregate(msgs, b.edge_dst, b.num_nodes, "sum", b.edge_mask)
+        agg = agg + h * jax.lax.rsqrt(deg)[:, None]  # self loop
+        return jax.nn.relu(mlp(lp["w"], agg)), None
+
+    if cfg.remat:
+        layer = jax.checkpoint(layer, policy=jax.checkpoint_policies.nothing_saveable)
+    h, _ = jax.lax.scan(layer, h, params["layers"], unroll=cfg.n_layers if cfg.scan_unroll else 1)
+    return mlp(params["decoder"], h)
+
+
+def _sage_apply(params, b: GraphBatch, cfg: GNNConfig):
+    h = mlp(params["encoder"], b.node_feat)
+
+    def layer(h, lp):
+        msgs = jnp.take(h, b.edge_src, axis=0)
+        agg = aggregate(msgs, b.edge_dst, b.num_nodes, "mean", b.edge_mask)
+        h = jax.nn.relu(mlp(lp["w_self"], h) + mlp(lp["w_neigh"], agg))
+        # L2 normalize (GraphSAGE 3.1)
+        return h / jnp.maximum(jnp.linalg.norm(h, axis=-1, keepdims=True), 1e-6), None
+
+    if cfg.remat:
+        layer = jax.checkpoint(layer, policy=jax.checkpoint_policies.nothing_saveable)
+    h, _ = jax.lax.scan(layer, h, params["layers"], unroll=cfg.n_layers if cfg.scan_unroll else 1)
+    return mlp(params["decoder"], h)
+
+
+_APPLY = {
+    "gin": _gin_apply,
+    "gat": _gat_apply,
+    "schnet": _schnet_apply,
+    "meshgraphnet": _mgn_apply,
+    "gcn": _gcn_apply,
+    "sage": _sage_apply,
+}
+
+
+def apply(params, batch: GraphBatch, cfg: GNNConfig) -> jnp.ndarray:
+    out = _APPLY[cfg.name](params, batch, cfg)
+    return jnp.where(batch.node_mask[:, None], out, 0.0)
+
+
+def graph_readout(node_out: jnp.ndarray, batch: GraphBatch, kind: str = "sum"):
+    return aggregate(node_out, batch.graph_id, batch.n_graphs, kind, batch.node_mask)

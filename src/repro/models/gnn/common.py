@@ -1,0 +1,108 @@
+"""Shared GNN substrate: static-shape graph batches, segment message passing
+(JAX has no sparse SpMM worth using here — message passing IS
+``take`` + ``segment_sum`` over an edge index, the same gather/scatter
+substrate as the GraphScale engine), MLP helpers.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["GraphBatch", "aggregate", "init_mlp", "mlp", "segment_softmax_xla"]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class GraphBatch:
+    """Padded static-shape (batched) graph — a registered pytree so jit
+    shardings / donation apply leaf-wise (``n_graphs`` is static metadata).
+
+    For batched small graphs (TU/molecule), ``graph_id`` maps nodes to their
+    graph; single-graph tasks use graph_id == 0. Padding nodes/edges are
+    masked. ``edge_dist`` carries precomputed pairwise distances (SchNet).
+    """
+
+    node_feat: jnp.ndarray  # (N, F)
+    edge_src: jnp.ndarray  # (E,) int32
+    edge_dst: jnp.ndarray  # (E,) int32
+    node_mask: jnp.ndarray  # (N,) bool
+    edge_mask: jnp.ndarray  # (E,) bool
+    graph_id: jnp.ndarray  # (N,) int32
+    n_graphs: int = dataclasses.field(metadata=dict(static=True))
+    edge_feat: Optional[jnp.ndarray] = None  # (E, Fe)
+    edge_dist: Optional[jnp.ndarray] = None  # (E,)
+
+    @property
+    def num_nodes(self) -> int:
+        return int(self.node_feat.shape[0])
+
+    @property
+    def num_edges(self) -> int:
+        return int(self.edge_src.shape[0])
+
+
+def aggregate(
+    messages: jnp.ndarray,  # (E, D)
+    dst: jnp.ndarray,  # (E,)
+    num_nodes: int,
+    kind: str = "sum",
+    mask: Optional[jnp.ndarray] = None,
+) -> jnp.ndarray:
+    """Per-destination reduce — the GraphScale accumulator in XLA form."""
+    if mask is not None:
+        m = mask.reshape(mask.shape + (1,) * (messages.ndim - 1))
+        if kind == "max":
+            messages = jnp.where(m, messages, -jnp.inf)
+        else:
+            messages = jnp.where(m, messages, 0)
+    if kind == "sum":
+        return jax.ops.segment_sum(messages, dst, num_segments=num_nodes)
+    if kind == "mean":
+        s = jax.ops.segment_sum(messages, dst, num_segments=num_nodes)
+        c = jax.ops.segment_sum(
+            (mask if mask is not None else jnp.ones_like(dst, jnp.float32)).astype(jnp.float32),
+            dst, num_segments=num_nodes,
+        )
+        return s / jnp.maximum(c, 1.0)[:, None]
+    if kind == "max":
+        out = jax.ops.segment_max(messages, dst, num_segments=num_nodes)
+        return jnp.where(jnp.isfinite(out), out, 0.0)
+    raise ValueError(kind)
+
+
+def segment_softmax_xla(scores, dst, valid, num_rows):
+    from repro.kernels.segment_softmax.ref import segment_softmax_reference
+
+    return segment_softmax_reference(scores, dst, valid, num_rows)
+
+
+def init_mlp(rng, sizes, dtype=jnp.float32, layer_norm=False) -> Dict[str, Any]:
+    keys = jax.random.split(rng, len(sizes) - 1)
+    p: Dict[str, Any] = {
+        "w": [
+            (jax.random.normal(k, (a, b)) * (a ** -0.5)).astype(dtype)
+            for k, a, b in zip(keys, sizes[:-1], sizes[1:])
+        ],
+        "b": [jnp.zeros((b,), dtype) for b in sizes[1:]],
+    }
+    if layer_norm:
+        p["ln_scale"] = jnp.ones((sizes[-1],), dtype)
+        p["ln_bias"] = jnp.zeros((sizes[-1],), dtype)
+    return p
+
+
+def mlp(p, x, act=jax.nn.relu, final_act=False):
+    n = len(p["w"])
+    for i, (w, b) in enumerate(zip(p["w"], p["b"])):
+        x = x @ w + b
+        if i < n - 1 or final_act:
+            x = act(x)
+    if "ln_scale" in p:
+        mu = x.mean(-1, keepdims=True)
+        var = x.var(-1, keepdims=True)
+        x = (x - mu) * jax.lax.rsqrt(var + 1e-6) * p["ln_scale"] + p["ln_bias"]
+    return x

@@ -1,0 +1,316 @@
+"""Transformer building blocks: RMSNorm, RoPE, chunked GQA attention, SwiGLU,
+sort-based MoE. Pure functions over explicit parameter pytrees (no flax), so
+every array's sharding is controlled by the caller's constraints.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "MoEConfig",
+    "rms_norm",
+    "rope",
+    "apply_rope",
+    "chunked_gqa_attention",
+    "decode_gqa_attention",
+    "swiglu",
+    "moe_ffn",
+    "moe_ffn_grouped",
+    "init_dense_ffn",
+    "init_moe_ffn",
+    "init_attention",
+]
+
+_NEG = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    d_ff_expert: int
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.01
+
+
+def rms_norm(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps)).astype(x.dtype) * w
+
+
+def rope(positions: jnp.ndarray, d: int, theta: float = 10000.0):
+    """Returns (cos, sin) of shape (..., d//2)."""
+    freqs = 1.0 / (theta ** (jnp.arange(0, d, 2, dtype=jnp.float32) / d))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray) -> jnp.ndarray:
+    """x: (..., S, D); cos/sin broadcastable (S, D/2). LLaMA half-rotation."""
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1).astype(
+        x.dtype
+    )
+
+
+def _attn_block(q, k, v, m, l, acc, qpos, kpos, scale, causal):
+    """Online-softmax update for one KV chunk (the XLA twin of the Pallas
+    flash kernel — identical recurrence, differentiable, remat-friendly).
+
+    GQA is expressed with a grouped einsum over (B, Hkv, G, S, hd) — K/V are
+    NEVER repeated to query heads. The earlier jnp.repeat version made XLA
+    move group-x redundant K/V between sequence shards (measured 7 GiB/layer
+    of f32[B,Hq,chunk,hd] all-gathers on llama3 train; §Perf LM iteration 2).
+    q: (B, Hkv, G, S, hd); k/v: (B, Hkv, chunk, hd).
+    """
+    s = jnp.einsum("bkgqd,bkcd->bkgqc", q, k).astype(jnp.float32) * scale
+    if causal:
+        s = jnp.where(qpos[:, None] >= kpos[None, :], s, _NEG)
+    m_new = jnp.maximum(m, s.max(axis=-1))
+    alpha = jnp.exp(m - m_new)
+    p = jnp.exp(s - m_new[..., None])
+    l_new = l * alpha + p.sum(axis=-1)
+    acc_new = acc * alpha[..., None] + jnp.einsum(
+        "bkgqc,bkcd->bkgqd", p.astype(v.dtype), v
+    ).astype(jnp.float32)
+    return m_new, l_new, acc_new
+
+
+def chunked_gqa_attention(
+    q: jnp.ndarray,  # (B, Hq, S, D)
+    k: jnp.ndarray,  # (B, Hkv, S, D)
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    chunk: int = 1024,
+    scale: Optional[float] = None,
+    unroll: bool = False,
+) -> jnp.ndarray:
+    """Memory-O(S·chunk) attention: scan over KV chunks with online softmax.
+
+    The per-chunk body is rematerialized so the backward pass recomputes
+    chunk logits instead of storing them (flash-attention backward in XLA).
+    """
+    b, hq, s, d = q.shape
+    hkv = k.shape[1]
+    group = hq // hkv
+    scale = (d ** -0.5) if scale is None else scale
+    chunk = min(chunk, s)
+    assert s % chunk == 0, (s, chunk)
+    n = s // chunk
+    qg = q.reshape(b, hkv, group, s, d)  # grouped view: no K/V repeat
+    k_chunks = k.reshape(b, hkv, n, chunk, d).transpose(2, 0, 1, 3, 4)
+    v_chunks = v.reshape(b, hkv, n, chunk, d).transpose(2, 0, 1, 3, 4)
+    qpos = jnp.arange(s, dtype=jnp.int32)
+
+    @jax.checkpoint
+    def body(carry, xs):
+        m, l, acc = carry
+        kc, vc, ci = xs
+        kpos = ci * chunk + jnp.arange(chunk, dtype=jnp.int32)
+        m, l, acc = _attn_block(qg, kc, vc, m, l, acc, qpos, kpos, scale, causal)
+        return (m, l, acc), None
+
+    m0 = jnp.full((b, hkv, group, s), _NEG, jnp.float32)
+    l0 = jnp.zeros((b, hkv, group, s), jnp.float32)
+    a0 = jnp.zeros((b, hkv, group, s, d), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0), (k_chunks, v_chunks, jnp.arange(n, dtype=jnp.int32)),
+        unroll=n if unroll else 1,
+    )
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(b, hq, s, d).astype(q.dtype)
+
+
+def decode_gqa_attention(
+    q: jnp.ndarray,  # (B, Hq, 1, D) — one new token
+    k_cache: jnp.ndarray,  # (B, Hkv, S, D)
+    v_cache: jnp.ndarray,
+    length_mask: jnp.ndarray,  # (B, S) bool — which cache slots are filled
+    scale: Optional[float] = None,
+) -> jnp.ndarray:
+    """Single-step decode attention. With a sequence-sharded cache, the
+    softmax reductions over S lower to all-reduces (GSPMD)."""
+    b, hq, _, d = q.shape
+    hkv = k_cache.shape[1]
+    group = hq // hkv
+    scale = (d ** -0.5) if scale is None else scale
+    qg = q.reshape(b, hkv, group, d)
+    s = jnp.einsum("bkgd,bksd->bkgs", qg, k_cache).astype(jnp.float32) * scale
+    s = jnp.where(length_mask[:, None, None, :], s, _NEG)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bksd->bkgd", w.astype(v_cache.dtype), v_cache)
+    return o.reshape(b, hq, 1, d)
+
+
+def swiglu(x: jnp.ndarray, w1, w3, w2) -> jnp.ndarray:
+    return (jax.nn.silu(x @ w1) * (x @ w3)) @ w2
+
+
+# ---------------------------------------------------------------------------
+# Sort-based MoE (capacity-dropped): flatten (token, expert) assignments, sort
+# by expert, pack each expert's tokens into (E, C) slots, grouped-GEMM, and
+# combine weighted by router gates. Irregular gather/scatter — shares the
+# segment-ops substrate with the GraphScale engine (DESIGN.md §6).
+# ---------------------------------------------------------------------------
+
+
+def moe_ffn_grouped(
+    x: jnp.ndarray,  # (T, d)
+    router_w, w1, w3, w2,
+    cfg: MoEConfig,
+    capacity: int,  # PER-GROUP capacity
+    groups: int,
+    expert_sharding=None,  # NamedSharding for (G, E, C, d) dispatch buffers
+):
+    """Grouped MoE dispatch (GSPMD-style): tokens split into ``groups``
+    independent dispatch groups (one per data shard) so the capacity dim of
+    the (G, E, C, d) buffers shards over fsdp instead of replicating expert
+    GEMMs on every data replica (hillclimb fix: 16x overcompute measured on
+    granite-moe train_4k — EXPERIMENTS.md §Perf)."""
+    t, d = x.shape
+    g, e, k = groups, cfg.num_experts, cfg.top_k
+    tg = t // g
+    xg = x.reshape(g, tg, d)
+
+    def route(xi):  # per-group index machinery (cheap; vmapped)
+        logits = (xi @ router_w).astype(jnp.float32)
+        gates = jax.nn.softmax(logits, axis=-1)  # (Tg, E)
+        top_g, top_i = jax.lax.top_k(gates, k)
+        top_g = top_g / jnp.maximum(top_g.sum(-1, keepdims=True), 1e-9)
+        eids = top_i.reshape(-1)
+        gvals = top_g.reshape(-1)
+        order = jnp.argsort(eids)
+        eids_s = eids[order]
+        tok_s = order // k
+        g_s = gvals[order]
+        counts = jnp.bincount(eids_s, length=e)
+        starts = jnp.cumsum(counts) - counts
+        pos = jnp.arange(tg * k) - starts[eids_s]
+        keep = pos < capacity
+        slot = jnp.where(keep, eids_s * capacity + pos, e * capacity)
+        tok_for_slot = jnp.full((e * capacity + 1,), tg, jnp.int32).at[slot].set(
+            tok_s.astype(jnp.int32)
+        )[:-1]
+        g_for_slot = jnp.zeros((e * capacity + 1,), x.dtype).at[slot].set(
+            g_s.astype(x.dtype)
+        )[:-1]
+        me = gates.mean(axis=0)
+        ce = jnp.zeros((e,), jnp.float32).at[eids].add(1.0) / (tg * k)
+        return tok_for_slot, g_for_slot, me, ce
+
+    tok_slot, g_slot, me, ce = jax.vmap(route)(xg)  # (G, E*C) ...
+    x_pad = jnp.concatenate([xg, jnp.zeros((g, 1, d), x.dtype)], axis=1)
+    gathered = jnp.take_along_axis(x_pad, tok_slot[..., None], axis=1)
+    gathered = gathered.reshape(g, e, capacity, d)
+    if expert_sharding is not None:
+        gathered = jax.lax.with_sharding_constraint(gathered, expert_sharding)
+    h = jnp.einsum("gecd,edf->gecf", gathered, w1)
+    h3 = jnp.einsum("gecd,edf->gecf", gathered, w3)
+    out_slots = jnp.einsum("gecf,efd->gecd", jax.nn.silu(h) * h3, w2)
+    if expert_sharding is not None:
+        out_slots = jax.lax.with_sharding_constraint(out_slots, expert_sharding)
+    out_slots = out_slots.reshape(g, e * capacity, d) * g_slot[..., None]
+
+    def combine(ts, os):
+        return jnp.zeros((tg + 1, d), x.dtype).at[ts].add(os)[:tg]
+
+    out = jax.vmap(combine)(tok_slot, out_slots)  # (G, Tg, d)
+    aux = cfg.router_aux_weight * e * jnp.mean(jnp.sum(me * ce, axis=-1))
+    return out.reshape(t, d), aux
+
+
+def moe_ffn(
+    x: jnp.ndarray,  # (T, d)
+    router_w: jnp.ndarray,  # (d, E)
+    w1: jnp.ndarray,  # (E, d, f)
+    w3: jnp.ndarray,  # (E, d, f)
+    w2: jnp.ndarray,  # (E, f, d)
+    cfg: MoEConfig,
+    capacity: int,
+    expert_sharding=None,  # NamedSharding for (E, C, d) dispatch buffers (EP)
+):
+    t, d = x.shape
+    e, k = cfg.num_experts, cfg.top_k
+    logits = (x @ router_w).astype(jnp.float32)  # (T, E)
+    gates_all = jax.nn.softmax(logits, axis=-1)
+    top_g, top_i = jax.lax.top_k(gates_all, k)  # (T, k)
+    top_g = top_g / jnp.maximum(top_g.sum(-1, keepdims=True), 1e-9)
+
+    eids = top_i.reshape(-1)  # (T*k,)
+    gvals = top_g.reshape(-1)
+    order = jnp.argsort(eids)
+    eids_s = eids[order]
+    tok_s = order // k
+    g_s = gvals[order]
+    counts = jnp.bincount(eids_s, length=e)
+    starts = jnp.cumsum(counts) - counts
+    pos = jnp.arange(t * k) - starts[eids_s]
+    keep = pos < capacity
+    slot = jnp.where(keep, eids_s * capacity + pos, e * capacity)  # dump slot
+
+    tok_for_slot = jnp.full((e * capacity + 1,), t, jnp.int32)  # t = dummy token
+    tok_for_slot = tok_for_slot.at[slot].set(tok_s.astype(jnp.int32))
+    g_for_slot = jnp.zeros((e * capacity + 1,), x.dtype).at[slot].set(g_s.astype(x.dtype))
+    tok_for_slot, g_for_slot = tok_for_slot[:-1], g_for_slot[:-1]
+
+    x_pad = jnp.concatenate([x, jnp.zeros((1, d), x.dtype)], axis=0)
+    gathered = jnp.take(x_pad, tok_for_slot, axis=0).reshape(e, capacity, d)
+    if expert_sharding is not None:  # expert-parallel dispatch (all-to-all)
+        gathered = jax.lax.with_sharding_constraint(gathered, expert_sharding)
+    h = jnp.einsum("ecd,edf->ecf", gathered, w1)
+    h3 = jnp.einsum("ecd,edf->ecf", gathered, w3)
+    out_slots = jnp.einsum("ecf,efd->ecd", jax.nn.silu(h) * h3, w2)
+    if expert_sharding is not None:
+        out_slots = jax.lax.with_sharding_constraint(out_slots, expert_sharding)
+    out_slots = out_slots.reshape(e * capacity, d) * g_for_slot[:, None]
+
+    out = jnp.zeros((t + 1, d), x.dtype).at[tok_for_slot].add(out_slots)[:t]
+
+    # Switch-style load-balance auxiliary loss
+    me = gates_all.mean(axis=0)  # (E,)
+    ce = jnp.zeros((e,), jnp.float32).at[eids].add(1.0) / (t * k)
+    aux = cfg.router_aux_weight * e * jnp.sum(me * ce)
+    return out, aux
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+
+def init_attention(rng, d_model, n_heads, n_kv, head_dim, dtype):
+    k1, k2, k3, k4 = jax.random.split(rng, 4)
+    s = d_model ** -0.5
+    return {
+        "wq": (jax.random.normal(k1, (d_model, n_heads * head_dim)) * s).astype(dtype),
+        "wk": (jax.random.normal(k2, (d_model, n_kv * head_dim)) * s).astype(dtype),
+        "wv": (jax.random.normal(k3, (d_model, n_kv * head_dim)) * s).astype(dtype),
+        "wo": (jax.random.normal(k4, (n_heads * head_dim, d_model)) * s).astype(dtype),
+    }
+
+
+def init_dense_ffn(rng, d_model, d_ff, dtype):
+    k1, k2, k3 = jax.random.split(rng, 3)
+    s = d_model ** -0.5
+    return {
+        "w1": (jax.random.normal(k1, (d_model, d_ff)) * s).astype(dtype),
+        "w3": (jax.random.normal(k2, (d_model, d_ff)) * s).astype(dtype),
+        "w2": (jax.random.normal(k3, (d_ff, d_model)) * (d_ff ** -0.5)).astype(dtype),
+    }
+
+
+def init_moe_ffn(rng, d_model, moe: MoEConfig, dtype):
+    k0, k1, k2, k3 = jax.random.split(rng, 4)
+    e, f = moe.num_experts, moe.d_ff_expert
+    s = d_model ** -0.5
+    return {
+        "router": (jax.random.normal(k0, (d_model, e)) * s).astype(jnp.float32),
+        "w1": (jax.random.normal(k1, (e, d_model, f)) * s).astype(dtype),
+        "w3": (jax.random.normal(k2, (e, d_model, f)) * s).astype(dtype),
+        "w2": (jax.random.normal(k3, (e, f, d_model)) * (f ** -0.5)).astype(dtype),
+    }

@@ -1,0 +1,1 @@
+from repro.models.recsys import din  # noqa: F401

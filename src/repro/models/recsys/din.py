@@ -1,0 +1,138 @@
+"""DIN — Deep Interest Network [arXiv:1706.06978].
+
+embed_dim=18, seq_len=100, attention MLP 80-40, output MLP 200-80,
+interaction = target attention over the user behavior sequence (unnormalized
+attention weights, per the paper).
+
+The embedding tables are the hot path (DESIGN.md §6: sharded lookup == the
+GraphScale vertex-label crossbar with rows as labels). The multi-hot user
+profile feature routes through the EmbeddingBag kernel path.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.embedding_bag.ref import embedding_bag_reference
+from repro.models.gnn.common import init_mlp, mlp
+
+__all__ = ["DINConfig", "init", "score", "score_candidates"]
+
+
+@dataclasses.dataclass(frozen=True)
+class DINConfig:
+    name: str = "din"
+    embed_dim: int = 18
+    seq_len: int = 100
+    attn_mlp: tuple = (80, 40)
+    out_mlp: tuple = (200, 80)
+    item_vocab: int = 1_000_000
+    cate_vocab: int = 1_000
+    profile_bag_len: int = 32  # multi-hot profile feature (EmbeddingBag)
+    dtype: Any = jnp.float32
+    lookup: str = "take"  # 'take' (GSPMD) | 'crossbar' (GraphScale exchange)
+
+
+def init(rng, cfg: DINConfig) -> Dict[str, Any]:
+    k_i, k_c, k_a, k_o, k_p = jax.random.split(rng, 5)
+    d = cfg.embed_dim
+    elem = 2 * d  # item ++ cate
+    return {
+        "item_table": (jax.random.normal(k_i, (cfg.item_vocab, d)) * 0.01).astype(cfg.dtype),
+        "cate_table": (jax.random.normal(k_c, (cfg.cate_vocab, d)) * 0.01).astype(cfg.dtype),
+        "attn": init_mlp(k_a, [4 * elem, *cfg.attn_mlp, 1], cfg.dtype),
+        # input: attention-pooled history (elem) ++ target (elem) ++ profile bag (d)
+        "out": init_mlp(k_o, [2 * elem + d, *cfg.out_mlp, 1], cfg.dtype),
+        "prelu": jnp.full((len(cfg.out_mlp),), 0.25, cfg.dtype),
+    }
+
+
+def _embed_elem(params, item_ids, cate_ids, lookup_fn=None):
+    """Item rows come from the (sharded) item table; ``lookup_fn`` overrides
+    the default XLA take with the GraphScale crossbar exchange
+    (dist/embedding.make_crossbar_lookup) — GSPMD otherwise all-gathers the
+    full table to every device (measured 717 MB/step on serve_bulk)."""
+    if lookup_fn is not None:
+        it = lookup_fn(params["item_table"], jnp.maximum(item_ids, 0))
+    else:
+        it = jnp.take(params["item_table"], jnp.maximum(item_ids, 0), axis=0)
+    ct = jnp.take(params["cate_table"], jnp.maximum(cate_ids, 0), axis=0)
+    return jnp.concatenate([it, ct], axis=-1)  # (..., 2d)
+
+
+def _attention_pool(params, hist, target, hist_mask):
+    """DIN local activation unit: a = MLP([h, t, h-t, h*t]); weighted sum.
+    hist (B, L, e); target (B, e) -> (B, e)."""
+    t = target[:, None, :].astype(hist.dtype)
+    feats = jnp.concatenate([hist, jnp.broadcast_to(t, hist.shape), hist - t, hist * t], axis=-1)
+    a = mlp(params["attn"], feats)[..., 0]  # (B, L) — NOT softmax-normalized (paper)
+    a = jnp.where(hist_mask, a, 0.0)
+    return jnp.einsum("bl,ble->be", a, hist)
+
+
+def score(params, batch: Dict[str, jnp.ndarray], cfg: DINConfig, lookup_fn=None) -> jnp.ndarray:
+    """batch: hist_items/hist_cates (B, L) [-1 pad], target_item/target_cate
+    (B,), profile_bag (B, P) [-1 pad]. Returns logits (B,)."""
+    hist = _embed_elem(params, batch["hist_items"], batch["hist_cates"], lookup_fn)  # (B, L, e)
+    hist_mask = batch["hist_items"] >= 0
+    hist = jnp.where(hist_mask[..., None], hist, 0.0)
+    target = _embed_elem(params, batch["target_item"], batch["target_cate"], lookup_fn)  # (B, e)
+    user = _attention_pool(params, hist, target, hist_mask)  # (B, e)
+    prof = embedding_bag_reference(params["cate_table"], batch["profile_bag"], mode="sum")
+    x = jnp.concatenate([user, target, prof], axis=-1)
+    # output MLP with PReLU activations
+    n = len(params["out"]["w"])
+    for i, (w, b) in enumerate(zip(params["out"]["w"], params["out"]["b"])):
+        x = x @ w + b
+        if i < n - 1:
+            alpha = params["prelu"][i]
+            x = jnp.where(x >= 0, x, alpha * x)
+    return x[..., 0]
+
+
+def score_candidates(
+    params,
+    batch: Dict[str, jnp.ndarray],
+    cfg: DINConfig,
+    chunk: int | None = None,
+) -> jnp.ndarray:
+    """Retrieval scoring: ONE user vs n_candidates items. batch:
+    hist_items/hist_cates (1, L), profile_bag (1, P), cand_items/cand_cates
+    (C,). Returns (C,) scores.
+
+    ``chunk=None`` scores all candidates in one vectorized pass (the sharded
+    production path: candidates sharded over the mesh); an integer chunk uses
+    lax.map for memory-bounded single-host runs.
+    """
+    c = batch["cand_items"].shape[0]
+    hist = _embed_elem(params, batch["hist_items"], batch["hist_cates"])  # (1, L, e)
+    hist_mask = batch["hist_items"] >= 0
+    hist = jnp.where(hist_mask[..., None], hist, 0.0)
+    prof = embedding_bag_reference(params["cate_table"], batch["profile_bag"], mode="sum")
+
+    def score_block(items, cates):
+        n = items.shape[0]
+        target = _embed_elem(params, items, cates)  # (n, e)
+        h = jnp.broadcast_to(hist, (n,) + hist.shape[1:])
+        m = jnp.broadcast_to(hist_mask, (n,) + hist_mask.shape[1:])
+        user = _attention_pool(params, h, target, m)  # (n, e)
+        pb = jnp.broadcast_to(prof, (n, prof.shape[-1]))
+        x = jnp.concatenate([user, target, pb], axis=-1)
+        layers = len(params["out"]["w"])
+        for i, (w, b) in enumerate(zip(params["out"]["w"], params["out"]["b"])):
+            x = x @ w + b
+            if i < layers - 1:
+                x = jnp.where(x >= 0, x, params["prelu"][i] * x)
+        return x[..., 0]
+
+    if chunk is None:
+        return score_block(batch["cand_items"], batch["cand_cates"])
+    assert c % chunk == 0, (c, chunk)
+    cands = (
+        batch["cand_items"].reshape(-1, chunk),
+        batch["cand_cates"].reshape(-1, chunk),
+    )
+    return jax.lax.map(lambda xs: score_block(*xs), cands).reshape(-1)

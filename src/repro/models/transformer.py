@@ -1,0 +1,269 @@
+"""Decoder-only LM (dense + MoE): scan-over-layers, GQA, qk-norm, RoPE,
+SwiGLU, KV-cache decode. Covers qwen3-14b / smollm-135m / llama3-8b /
+granite-moe / qwen3-moe configs.
+
+Parameters are explicit pytrees with layer-stacked leaves (L, ...) consumed by
+``jax.lax.scan`` — one compiled block regardless of depth (compile time and
+HLO size stay O(1) in layers, which the multi-pod dry-run depends on).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import (
+    MoEConfig,
+    apply_rope,
+    chunked_gqa_attention,
+    decode_gqa_attention,
+    init_attention,
+    init_dense_ffn,
+    init_moe_ffn,
+    moe_ffn,
+    moe_ffn_grouped,
+    rms_norm,
+    rope,
+    swiglu,
+)
+
+__all__ = ["LMConfig", "init_params", "forward", "init_kv_cache", "decode_step", "count_params"]
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: Optional[int] = None  # default d_model // n_heads
+    qk_norm: bool = False
+    rope_theta: float = 10000.0
+    moe: Optional[MoEConfig] = None
+    dtype: Any = jnp.bfloat16
+    attn_chunk: int = 1024
+    remat: bool = True
+    # explicit GSPMD activation constraints (NamedShardings; hashable), set by
+    # the launcher per mesh — without them the FSDP param sharding conflicts
+    # with batch sharding at the embedding gather and GSPMD drops the batch
+    # axis (measured: 340 GiB/device temp on smollm train_4k).
+    act_sharding: Any = None  # (B, S, d)
+    logit_sharding: Any = None  # (B, S, V)
+    expert_sharding: Any = None  # (E, C, d) MoE dispatch buffers
+    attn_sharding: Any = None  # (B, Hq, S, hd) q/scores head sharding (if divisible)
+    moe_groups: int = 1  # >1: grouped dispatch (capacity dim shards over fsdp)
+    vocab_real: Any = None  # set when vocab is PADDED for shardability; loss masks the tail
+    # Unroll layer/chunk scans so XLA cost_analysis counts every iteration
+    # (while-loop bodies are costed ONCE regardless of trip count — measured).
+    # The dry-run sets this; trainers keep rolled scans for compile speed.
+    scan_unroll: bool = False
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim if self.head_dim is not None else self.d_model // self.n_heads
+
+    def capacity(self, tokens_per_shard: int) -> int:
+        assert self.moe is not None
+        c = int(tokens_per_shard * self.moe.top_k / self.moe.num_experts
+                * self.moe.capacity_factor)
+        return max(8, ((c + 7) // 8) * 8)
+
+
+def init_params(rng: jax.Array, cfg: LMConfig) -> Dict[str, Any]:
+    k_emb, k_layers, k_norm, k_out = jax.random.split(rng, 4)
+
+    def layer_init(k):
+        ka, kf = jax.random.split(k)
+        p = {
+            "attn": init_attention(ka, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd, cfg.dtype),
+            "ln1": jnp.ones((cfg.d_model,), cfg.dtype),
+            "ln2": jnp.ones((cfg.d_model,), cfg.dtype),
+        }
+        if cfg.qk_norm:
+            p["q_norm"] = jnp.ones((cfg.hd,), cfg.dtype)
+            p["k_norm"] = jnp.ones((cfg.hd,), cfg.dtype)
+        if cfg.moe is None:
+            p["ffn"] = init_dense_ffn(kf, cfg.d_model, cfg.d_ff, cfg.dtype)
+        else:
+            p["ffn"] = init_moe_ffn(kf, cfg.d_model, cfg.moe, cfg.dtype)
+        return p
+
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    layers = jax.vmap(layer_init)(layer_keys)  # stacked (L, ...) leaves
+    emb_scale = cfg.d_model ** -0.5
+    return {
+        "embed": (jax.random.normal(k_emb, (cfg.vocab, cfg.d_model)) * emb_scale).astype(cfg.dtype),
+        "layers": layers,
+        "final_norm": jnp.ones((cfg.d_model,), cfg.dtype),
+        "unembed": (jax.random.normal(k_out, (cfg.d_model, cfg.vocab)) * emb_scale).astype(cfg.dtype),
+    }
+
+
+def _attention(lp, x, cfg: LMConfig, cos, sin, *, cache=None, length_mask=None):
+    b, s, _ = x.shape
+    h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = (x @ lp["attn"]["wq"]).reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+    k = (x @ lp["attn"]["wk"]).reshape(b, s, kvh, hd).transpose(0, 2, 1, 3)
+    v = (x @ lp["attn"]["wv"]).reshape(b, s, kvh, hd).transpose(0, 2, 1, 3)
+    if cfg.qk_norm:
+        q = rms_norm(q, lp["q_norm"])
+        k = rms_norm(k, lp["k_norm"])
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    q = _wsc(q, cfg.attn_sharding)
+    if cache is None:
+        o = chunked_gqa_attention(
+            q, k, v, causal=True, chunk=min(cfg.attn_chunk, s),
+            unroll=cfg.scan_unroll,
+        )
+        new_cache = None
+    else:
+        k_cache, v_cache, pos = cache
+        k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k, pos, axis=2)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v, pos, axis=2)
+        o = decode_gqa_attention(q, k_cache, v_cache, length_mask)
+        new_cache = (k_cache, v_cache)
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, h * hd)
+    return o @ lp["attn"]["wo"], new_cache
+
+
+def _ffn(lp, x, cfg: LMConfig):
+    b, s, d = x.shape
+    if cfg.moe is None:
+        return swiglu(x, lp["ffn"]["w1"], lp["ffn"]["w3"], lp["ffn"]["w2"]), 0.0
+    flat = x.reshape(b * s, d)
+    if cfg.moe_groups > 1:
+        out, aux = moe_ffn_grouped(
+            flat,
+            lp["ffn"]["router"], lp["ffn"]["w1"], lp["ffn"]["w3"], lp["ffn"]["w2"],
+            cfg.moe,
+            capacity=cfg.capacity(b * s // cfg.moe_groups),
+            groups=cfg.moe_groups,
+            expert_sharding=cfg.expert_sharding,
+        )
+    else:
+        out, aux = moe_ffn(
+            flat,
+            lp["ffn"]["router"],
+            lp["ffn"]["w1"],
+            lp["ffn"]["w3"],
+            lp["ffn"]["w2"],
+            cfg.moe,
+            capacity=cfg.capacity(b * s),
+            expert_sharding=cfg.expert_sharding,
+        )
+    return out.reshape(b, s, d), aux
+
+
+def _wsc(x, sharding):
+    return jax.lax.with_sharding_constraint(x, sharding) if sharding is not None else x
+
+
+def _block(lp, x, cfg: LMConfig, cos, sin):
+    a, _ = _attention(lp, rms_norm(x, lp["ln1"]), cfg, cos, sin)
+    # constrain the row-parallel sublayer OUTPUTS (not just the residual sum):
+    # under sequence parallelism GSPMD then emits reduce-scatter instead of
+    # all-reduce for the wo/w2 partial sums (Megatron-SP; §Perf LM iteration)
+    a = _wsc(a, cfg.act_sharding)
+    x = _wsc(x + a, cfg.act_sharding)
+    f, aux = _ffn(lp, rms_norm(x, lp["ln2"]), cfg)
+    f = _wsc(f, cfg.act_sharding)
+    return _wsc(x + f, cfg.act_sharding), aux
+
+
+def forward(params, tokens: jnp.ndarray, cfg: LMConfig) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """tokens (B, S) -> logits (B, S, V), aux_loss (scalar)."""
+    b, s = tokens.shape
+    x = _wsc(jnp.take(params["embed"], tokens, axis=0), cfg.act_sharding)
+    cos, sin = rope(jnp.arange(s), cfg.hd, cfg.rope_theta)
+    block = _block
+    if cfg.remat:
+        block = jax.checkpoint(
+            _block, policy=jax.checkpoint_policies.nothing_saveable, static_argnums=(2,)
+        )
+
+    def scan_body(carry, lp):
+        x, aux = carry
+        x, a = block(lp, x, cfg, cos, sin)
+        return (x, aux + a), None
+
+    (x, aux), _ = jax.lax.scan(
+        scan_body, (x, jnp.float32(0.0)), params["layers"],
+        unroll=cfg.n_layers if cfg.scan_unroll else 1,
+    )
+    x = rms_norm(x, params["final_norm"])
+    logits = _wsc(x @ params["unembed"], cfg.logit_sharding)
+    return logits, aux
+
+
+# ---------------------------------------------------------------------------
+# KV-cache decode
+# ---------------------------------------------------------------------------
+
+
+def init_kv_cache(cfg: LMConfig, batch: int, max_len: int, dtype=None):
+    dtype = dtype or cfg.dtype
+    shape = (cfg.n_layers, batch, cfg.n_kv_heads, max_len, cfg.hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def decode_step(params, cache, tokens: jnp.ndarray, pos: jnp.ndarray, cfg: LMConfig):
+    """One decode step. tokens (B, 1); pos scalar int32 (current position).
+
+    Returns (logits (B, V), new cache). Cache layout (L, B, Hkv, S, D); the
+    sequence axis may be sharded (sequence-parallel cache) — the softmax
+    reductions inside decode attention then lower to all-reduces.
+    """
+    b = tokens.shape[0]
+    max_len = cache["k"].shape[3]
+    x = _wsc(jnp.take(params["embed"], tokens, axis=0), cfg.act_sharding)  # (B, 1, d)
+    cos, sin = rope(pos[None], cfg.hd, cfg.rope_theta)  # (1, hd/2)
+    length_mask = (jnp.arange(max_len, dtype=jnp.int32)[None, :] <= pos).astype(bool)
+    length_mask = jnp.broadcast_to(length_mask, (b, max_len))
+
+    def scan_body(x_aux, layer):
+        x, _ = x_aux
+        lp, kc, vc = layer
+        a, new_kv = _attention(
+            lp, rms_norm(x, lp["ln1"]), cfg, cos, sin,
+            cache=(kc, vc, pos), length_mask=length_mask,
+        )
+        x = x + a
+        f, _ = _ffn(lp, rms_norm(x, lp["ln2"]), cfg)
+        return (x + f, 0.0), new_kv
+
+    (x, _), new_kv = jax.lax.scan(
+        scan_body, (x, 0.0), (params["layers"], cache["k"], cache["v"]),
+        unroll=cfg.n_layers if cfg.scan_unroll else 1,
+    )
+    x = rms_norm(x, params["final_norm"])
+    logits = (x @ params["unembed"])[:, 0, :]
+    return logits, {"k": new_kv[0], "v": new_kv[1]}
+
+
+def count_params(cfg: LMConfig) -> int:
+    d, hd = cfg.d_model, cfg.hd
+    attn = d * (cfg.n_heads * hd) * 2 + d * (cfg.n_kv_heads * hd) * 2
+    if cfg.moe is None:
+        ffn = 3 * d * cfg.d_ff
+    else:
+        ffn = cfg.moe.num_experts * 3 * d * cfg.moe.d_ff_expert + d * cfg.moe.num_experts
+    per_layer = attn + ffn + 2 * d + (2 * hd if cfg.qk_norm else 0)
+    return cfg.n_layers * per_layer + 2 * cfg.vocab * d + d
+
+
+def active_params(cfg: LMConfig) -> int:
+    """Active (per-token) parameters — MoE counts only top_k experts."""
+    if cfg.moe is None:
+        return count_params(cfg)
+    d, hd = cfg.d_model, cfg.hd
+    attn = d * (cfg.n_heads * hd) * 2 + d * (cfg.n_kv_heads * hd) * 2
+    ffn = cfg.moe.top_k * 3 * d * cfg.moe.d_ff_expert + d * cfg.moe.num_experts
+    per_layer = attn + ffn + 2 * d + (2 * hd if cfg.qk_norm else 0)
+    return cfg.n_layers * per_layer + 2 * cfg.vocab * d + d

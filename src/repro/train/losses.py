@@ -1,0 +1,31 @@
+"""Loss functions (always reduced in float32)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["softmax_xent", "masked_softmax_xent", "binary_xent", "mse"]
+
+
+def softmax_xent(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    lg = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lg, axis=-1)
+    gold = jnp.take_along_axis(lg, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - gold)
+
+
+def masked_softmax_xent(logits, labels, mask) -> jnp.ndarray:
+    lg = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lg, axis=-1)
+    gold = jnp.take_along_axis(lg, labels[..., None], axis=-1)[..., 0]
+    per = (lse - gold) * mask
+    return per.sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def binary_xent(logits, labels) -> jnp.ndarray:
+    lg = logits.astype(jnp.float32)
+    return jnp.mean(jnp.maximum(lg, 0) - lg * labels + jnp.log1p(jnp.exp(-jnp.abs(lg))))
+
+
+def mse(pred, target) -> jnp.ndarray:
+    return jnp.mean(jnp.square(pred.astype(jnp.float32) - target.astype(jnp.float32)))

@@ -1,0 +1,190 @@
+"""Train / serve step builders for every architecture family.
+
+Each builder returns a pure ``step(state, batch)`` (or ``serve(params, ...)``)
+suitable for ``jax.jit`` with explicit shardings — the exact functions the
+multi-pod dry-run lowers and the trainers execute.
+
+``TrainState`` is a plain dict {'params', 'opt'} so sharding rules apply
+leaf-wise, and the whole state is donate-able.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as tfm
+from repro.models.gnn import archs as gnn
+from repro.models.gnn.common import GraphBatch
+from repro.models.recsys import din as din_mod
+from repro.train import losses
+from repro.train.optim import AdamWConfig, adamw_update, init_adamw
+
+__all__ = [
+    "make_lm_train_step",
+    "make_lm_prefill",
+    "make_lm_decode_step",
+    "make_gnn_train_step",
+    "make_gnn_infer",
+    "make_din_train_step",
+    "make_din_serve",
+    "make_din_retrieval",
+    "init_train_state",
+]
+
+
+def init_train_state(params, opt_cfg: AdamWConfig):
+    return {"params": params, "opt": init_adamw(params, opt_cfg)}
+
+
+def _apply_update(state, grads, opt_cfg, grad_transform=None):
+    if grad_transform is not None:
+        grads = grad_transform(grads)
+    new_p, new_opt = adamw_update(state["params"], grads, state["opt"], opt_cfg)
+    return {"params": new_p, "opt": new_opt}
+
+
+# ---------------------------------------------------------------------------
+# LM family
+# ---------------------------------------------------------------------------
+
+
+def make_lm_train_step(
+    cfg: tfm.LMConfig,
+    opt_cfg: AdamWConfig,
+    grad_accum: int = 1,
+    grad_transform: Optional[Callable] = None,
+):
+    def loss_fn(params, tokens, labels):
+        logits, aux = tfm.forward(params, tokens, cfg)
+        if cfg.vocab_real is not None and cfg.vocab_real < cfg.vocab:
+            # vocab padded for shardability: mask the padding columns
+            pad_mask = jnp.arange(cfg.vocab) >= cfg.vocab_real
+            logits = jnp.where(pad_mask, jnp.asarray(-1e30, logits.dtype), logits)
+        return losses.softmax_xent(logits, labels) + aux
+
+    def train_step(state, batch):
+        if grad_accum == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(
+                state["params"], batch["tokens"], batch["labels"]
+            )
+        else:
+            b = batch["tokens"].shape[0]
+            mb = b // grad_accum
+            toks = batch["tokens"].reshape(grad_accum, mb, -1)
+            labs = batch["labels"].reshape(grad_accum, mb, -1)
+
+            def acc_body(carry, xs):
+                loss_acc, g_acc = carry
+                t, l = xs
+                loss, g = jax.value_and_grad(loss_fn)(state["params"], t, l)
+                return (loss_acc + loss, jax.tree.map(jnp.add, g_acc, g)), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state["params"]
+            )
+            (loss, grads), _ = jax.lax.scan(acc_body, (jnp.float32(0.0), zeros), (toks, labs))
+            loss = loss / grad_accum
+            grads = jax.tree.map(lambda g: g / grad_accum, grads)
+        new_state = _apply_update(state, grads, opt_cfg, grad_transform)
+        return new_state, {"loss": loss}
+
+    return train_step
+
+
+def make_lm_prefill(cfg: tfm.LMConfig):
+    def prefill(params, tokens):
+        logits, _ = tfm.forward(params, tokens, cfg)
+        return logits
+
+    return prefill
+
+
+def make_lm_decode_step(cfg: tfm.LMConfig):
+    def decode(params, cache, tokens, pos):
+        return tfm.decode_step(params, cache, tokens, pos, cfg)
+
+    return decode
+
+
+# ---------------------------------------------------------------------------
+# GNN family — task kinds: 'node_class' | 'graph_class' | 'node_reg'
+# ---------------------------------------------------------------------------
+
+
+def make_gnn_train_step(
+    cfg: gnn.GNNConfig,
+    opt_cfg: AdamWConfig,
+    task: str = "node_class",
+    loss_nodes: Optional[int] = None,  # minibatch: loss only on seed nodes
+    grad_transform: Optional[Callable] = None,
+):
+    def loss_fn(params, batch: GraphBatch, labels):
+        out = gnn.apply(params, batch, cfg)
+        if task == "graph_class":
+            pooled = gnn.graph_readout(out, batch, "sum")
+            return losses.softmax_xent(pooled, labels)
+        if task == "node_reg":
+            mask = batch.node_mask.astype(jnp.float32)[:, None]
+            return losses.mse(out * mask, labels * mask)
+        mask = batch.node_mask
+        out_l, lab_l = out, labels
+        if loss_nodes is not None:
+            out_l, lab_l, mask = out[:loss_nodes], labels[:loss_nodes], mask[:loss_nodes]
+        return losses.masked_softmax_xent(out_l, lab_l, mask.astype(jnp.float32))
+
+    def train_step(state, batch, labels):
+        loss, grads = jax.value_and_grad(loss_fn)(state["params"], batch, labels)
+        new_state = _apply_update(state, grads, opt_cfg, grad_transform)
+        return new_state, {"loss": loss}
+
+    return train_step
+
+
+def make_gnn_infer(cfg: gnn.GNNConfig, task: str = "node_class"):
+    def infer(params, batch: GraphBatch):
+        out = gnn.apply(params, batch, cfg)
+        if task == "graph_class":
+            return gnn.graph_readout(out, batch, "sum")
+        return out
+
+    return infer
+
+
+# ---------------------------------------------------------------------------
+# RecSys (DIN)
+# ---------------------------------------------------------------------------
+
+
+def make_din_train_step(
+    cfg: din_mod.DINConfig,
+    opt_cfg: AdamWConfig,
+    grad_transform: Optional[Callable] = None,
+    lookup_fn: Optional[Callable] = None,
+):
+    def loss_fn(params, batch):
+        logits = din_mod.score(params, batch, cfg, lookup_fn=lookup_fn)
+        return losses.binary_xent(logits, batch["labels"])
+
+    def train_step(state, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(state["params"], batch)
+        new_state = _apply_update(state, grads, opt_cfg, grad_transform)
+        return new_state, {"loss": loss}
+
+    return train_step
+
+
+def make_din_serve(cfg: din_mod.DINConfig, lookup_fn: Optional[Callable] = None):
+    def serve(params, batch):
+        return din_mod.score(params, batch, cfg, lookup_fn=lookup_fn)
+
+    return serve
+
+
+def make_din_retrieval(cfg: din_mod.DINConfig, chunk: Optional[int] = None):
+    def retrieve(params, batch):
+        return din_mod.score_candidates(params, batch, cfg, chunk=chunk)
+
+    return retrieve

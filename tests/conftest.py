@@ -1,0 +1,22 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — tests run on the single real
+CPU device; multi-device tests spawn subprocesses with their own flags."""
+import numpy as np
+import pytest
+
+import repro.core.graph as G
+
+
+@pytest.fixture(scope="session")
+def small_graphs():
+    return {
+        "karate": G.karate_club(),
+        "rmat10": G.rmat(10, 8, seed=1),
+        "grid": G.grid_2d(13, 17),
+        "star": G.star(64),
+        "chain": G.chain(40),
+    }
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

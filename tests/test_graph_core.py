@@ -1,0 +1,233 @@
+"""Unit + property tests for the GraphScale core: graph structures, the 2-D
+partitioner, and both engines vs pure-numpy oracles."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import repro.core.graph as G
+from repro.core.edge_centric import run_edge_centric
+from repro.core.engine import EngineOptions, run
+from repro.core.partition import (
+    PartitionConfig,
+    partition_2d,
+    partition_edge_centric,
+    stride_permutation,
+)
+from repro.core.problems import INF_U32, bfs, pagerank, sssp, wcc
+from repro.core.reference import (
+    bfs_reference,
+    pagerank_reference,
+    sssp_reference,
+    wcc_reference,
+)
+
+
+# ---------------------------------------------------------------------------
+# graph structures
+# ---------------------------------------------------------------------------
+
+
+def test_coo_csr_roundtrip(small_graphs):
+    g = small_graphs["rmat10"]
+    csr = G.coo_to_csr(g)
+    back = G.csr_to_coo(csr)
+    orig = set(zip(g.src.tolist(), g.dst.tolist()))
+    rt = set(zip(back.src.tolist(), back.dst.tolist()))
+    assert orig == rt
+
+
+def test_symmetrize_contains_both_directions(small_graphs):
+    g = small_graphs["karate"]
+    u = G.symmetrize(g)
+    es = set(zip(u.src.tolist(), u.dst.tolist()))
+    for s, d in zip(g.src.tolist(), g.dst.tolist()):
+        assert (s, d) in es and (d, s) in es
+
+
+def test_bytes_per_edge_csr_smaller_for_dense():
+    dense = G.rmat(10, 32, seed=0)  # avg degree >> 1
+    assert G.bytes_per_edge(dense, compressed=True) < G.bytes_per_edge(
+        dense, compressed=False
+    )
+
+
+def test_rmat_properties():
+    g = G.rmat(12, 16, seed=3)
+    assert g.num_vertices == 4096
+    deg = G.out_degrees(g)
+    # R-MAT is skewed: max degree far above mean
+    assert deg.max() > 8 * deg.mean()
+
+
+# ---------------------------------------------------------------------------
+# partitioner
+# ---------------------------------------------------------------------------
+
+
+def test_stride_permutation_is_permutation():
+    perm = stride_permutation(1000, 100)
+    assert sorted(perm.tolist()) == list(range(1000))
+    # first vertices of the new order are v0, v100, v200, ...
+    inv = np.argsort(perm)
+    assert inv[0] == 0 and inv[1] == 100 and inv[2] == 200
+
+
+@pytest.mark.parametrize("p,l", [(1, 1), (2, 3), (4, 2), (8, 1)])
+def test_partition_preserves_all_edges(small_graphs, p, l):
+    g = small_graphs["rmat10"]
+    pg = partition_2d(g, PartitionConfig(p=p, l=l, lane=4))
+    assert int(pg.bucket_sizes.sum()) == g.num_edges
+    assert pg.valid.sum() == g.num_edges
+    # every edge's rewritten indices decode back to the original edge set
+    vpc, sub = pg.vertices_per_core, pg.sub_size
+    seen = set()
+    for i in range(p):
+        for m in range(l):
+            v = pg.valid[i, m]
+            gidx = pg.src_gidx[i, m][v]
+            lidx = pg.dst_lidx[i, m][v]
+            src_core = gidx // sub
+            src = src_core * vpc + m * sub + (gidx % sub)
+            dst = i * vpc + lidx
+            seen.update(zip(src.tolist(), dst.tolist()))
+    assert seen == set(zip(g.src.tolist(), g.dst.tolist()))
+
+
+def test_partition_dst_sorted_within_bucket(small_graphs):
+    g = small_graphs["rmat10"]
+    pg = partition_2d(g, PartitionConfig(p=2, l=2, lane=4))
+    for i in range(2):
+        for m in range(2):
+            d = pg.dst_lidx[i, m]
+            assert (np.diff(d) >= 0).all()  # padding rows at vpc-1 keep order
+
+
+def test_stride_mapping_improves_balance():
+    g = G.star(2000)  # all edges hit one interval without shuffling
+    pg_plain = partition_2d(G.symmetrize(g), PartitionConfig(p=4, l=2, lane=4))
+    pg_stride = partition_2d(
+        G.symmetrize(g), PartitionConfig(p=4, l=2, lane=4, stride=100)
+    )
+    assert pg_stride.imbalance <= pg_plain.imbalance
+
+
+@given(
+    n=st.integers(10, 200),
+    m=st.integers(10, 400),
+    p=st.sampled_from([1, 2, 4]),
+    l=st.sampled_from([1, 2, 3]),
+    seed=st.integers(0, 10_000),
+)
+@settings(max_examples=25, deadline=None)
+def test_partition_edge_conservation_property(n, m, p, l, seed):
+    g = G.erdos_renyi(n, m, seed=seed)
+    if g.num_edges == 0:
+        return
+    pg = partition_2d(g, PartitionConfig(p=p, l=l, lane=2, edge_pad=4))
+    assert int(pg.bucket_sizes.sum()) == g.num_edges
+    assert 0.0 <= pg.padding_ratio < 1.0
+
+
+# ---------------------------------------------------------------------------
+# engines vs oracles
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("gname,root", [("karate", 0), ("rmat10", 5), ("grid", 3)])
+def test_bfs_matches_reference(small_graphs, gname, root):
+    g = G.symmetrize(small_graphs[gname])
+    pg = partition_2d(g, PartitionConfig(p=2, l=3, lane=4))
+    res = run(bfs(root), g, pg, EngineOptions())
+    assert np.array_equal(res.labels["label"], bfs_reference(g, root))
+    assert res.converged
+
+
+@pytest.mark.parametrize("gname", ["karate", "rmat10", "star", "chain"])
+def test_wcc_matches_reference(small_graphs, gname):
+    g0 = small_graphs[gname]
+    g = G.symmetrize(g0)
+    pg = partition_2d(g, PartitionConfig(p=2, l=2, lane=4, stride=7))
+    res = run(wcc(), g, pg, EngineOptions())
+    assert np.array_equal(res.labels["label"], wcc_reference(g0))
+
+
+@pytest.mark.parametrize("gname", ["karate", "rmat10", "grid"])
+def test_pagerank_matches_reference(small_graphs, gname):
+    g = small_graphs[gname]
+    pg = partition_2d(g, PartitionConfig(p=2, l=2, lane=4))
+    res = run(pagerank(), g, pg, EngineOptions())
+    np.testing.assert_allclose(
+        res.labels["label"], pagerank_reference(g), atol=1e-4
+    )
+
+
+def test_sssp_matches_reference(rng):
+    g0 = G.rmat(9, 8, seed=4)
+    w = rng.random(g0.num_edges).astype(np.float32)
+    g = G.COOGraph(src=g0.src, dst=g0.dst, num_vertices=g0.num_vertices, weights=w)
+    pg = partition_2d(g, PartitionConfig(p=2, l=2, lane=4))
+    res = run(sssp(1), g, pg, EngineOptions())
+    ref = sssp_reference(g, 1)
+    np.testing.assert_allclose(res.labels["label"], ref, rtol=1e-5)
+
+
+def test_async_converges_in_fewer_or_equal_iterations(small_graphs):
+    """The paper's central claim (Fig. 1 right): asynchronous update
+    propagation needs no MORE iterations than synchronous."""
+    for gname in ("grid", "karate", "rmat10"):
+        g = G.symmetrize(small_graphs[gname])
+        pg = partition_2d(g, PartitionConfig(p=2, l=4, lane=4))
+        a = run(bfs(0), g, pg, EngineOptions(immediate_updates=True))
+        s = run(bfs(0), g, pg, EngineOptions(immediate_updates=False))
+        assert a.iterations <= s.iterations
+        assert np.array_equal(a.labels["label"], s.labels["label"])
+
+
+def test_edge_centric_baseline_matches(small_graphs):
+    g = G.symmetrize(small_graphs["rmat10"])
+    part = partition_edge_centric(g, p=4, lane=4)
+    res = run_edge_centric(bfs(7), g, part)
+    assert np.array_equal(res.labels["label"], bfs_reference(g, 7))
+
+
+def test_edge_centric_equals_sync_iterations(small_graphs):
+    """HitGraph-style engine is synchronous: same iteration count as the
+    GraphScale engine with immediate updates OFF."""
+    g = G.symmetrize(small_graphs["grid"])
+    pg = partition_2d(g, PartitionConfig(p=2, l=2, lane=4))
+    part = partition_edge_centric(g, p=2, lane=4)
+    sync = run(bfs(0), g, pg, EngineOptions(immediate_updates=False))
+    ec = run_edge_centric(bfs(0), g, part)
+    assert sync.iterations == ec.iterations
+
+
+def test_engine_kernel_route_matches_xla(small_graphs):
+    """EngineOptions(use_kernel=True) routes the segment reduce through the
+    kernels package and must match the XLA path exactly."""
+    g = G.symmetrize(small_graphs["karate"])
+    pg = partition_2d(g, PartitionConfig(p=2, l=2, lane=4))
+    a = run(bfs(0), g, pg, EngineOptions(use_kernel=False))
+    b = run(bfs(0), g, pg, EngineOptions(use_kernel=True))
+    assert np.array_equal(a.labels["label"], b.labels["label"])
+    assert a.iterations == b.iterations
+
+
+@given(
+    n=st.integers(8, 120),
+    m=st.integers(8, 300),
+    seed=st.integers(0, 1000),
+    p=st.sampled_from([1, 2, 4]),
+    l=st.sampled_from([1, 2]),
+    async_=st.booleans(),
+    stride=st.sampled_from([None, 7, 100]),
+)
+@settings(max_examples=20, deadline=None)
+def test_engine_bfs_property(n, m, seed, p, l, async_, stride):
+    """Engine invariant: BFS fixed point is independent of partitioning,
+    stride mapping, and update-propagation scheme."""
+    g = G.symmetrize(G.erdos_renyi(n, m, seed=seed))
+    if g.num_edges == 0:
+        return
+    pg = partition_2d(g, PartitionConfig(p=p, l=l, lane=2, stride=stride))
+    res = run(bfs(0), g, pg, EngineOptions(immediate_updates=async_))
+    assert np.array_equal(res.labels["label"], bfs_reference(g, 0))
