@@ -1,0 +1,18 @@
+PYTHON ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: test bench-smoke bench check
+
+# tier-1 verify (ROADMAP.md)
+test:
+	$(PYTHON) -m pytest -x -q
+
+# quick engine-path sanity: fused Pallas vs XLA timings -> BENCH_engine.json
+bench-smoke:
+	$(PYTHON) -c "import benchmarks.bench_engine as b; b.main(lambda n, us, d='': print(f'{n},{us:.1f},{d}'))"
+
+# full benchmark harness (all paper figures)
+bench:
+	$(PYTHON) -m benchmarks.run
+
+check: test bench-smoke

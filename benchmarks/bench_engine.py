@@ -1,0 +1,64 @@
+"""Engine backend comparison: the fused Pallas gather-map-reduce path vs the
+XLA materialize-then-reduce oracle at matched shapes, on >= 2 graph scales.
+
+Emits CSV rows through the harness AND writes BENCH_engine.json at the repo
+root so the perf trajectory is recorded across PRs. On this CPU container the
+Pallas numbers are interpret-mode (correctness-grade, expected slower); the
+structural win the JSON also records is the traffic model: bytes the XLA path
+materializes for the (p, E_pad) contributions array that the fused path never
+writes, plus tile padding with/without degree-aware packing.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+import repro.core.graph as G
+from benchmarks.common import mteps, time_call
+from repro.core.engine import EngineOptions, run
+from repro.core.partition import PartitionConfig, partition_2d
+from repro.core.problems import bfs, pagerank
+
+JSON_PATH = pathlib.Path(__file__).resolve().parent.parent / "BENCH_engine.json"
+
+SCALES = {
+    "rmat9": (9, 8, 0),  # (log2 V, avg degree, bfs root)
+    "rmat11": (11, 8, 3),
+}
+
+
+def main(emit):
+    records = []
+    for sname, (s, d, root) in SCALES.items():
+        g = G.symmetrize(G.rmat(s, d, seed=1))
+        pg = partition_2d(g, PartitionConfig(p=4, l=4, lane=8, stride=100))
+        for pname, prob in (("bfs", bfs(root)), ("pr", pagerank(tol=1e-4))):
+            gg = G.rmat(s, d, seed=1) if pname == "pr" else g
+            pgg = (
+                partition_2d(gg, PartitionConfig(p=4, l=4, lane=8))
+                if pname == "pr"
+                else pg
+            )
+            row = {"graph": sname, "problem": pname, "V": gg.num_vertices,
+                   "E": gg.num_edges, "p": pgg.p, "l": pgg.l,
+                   "tile_shape": list(pgg.tile_src.shape),
+                   "tile_padding_ratio": pgg.tile_padding_ratio}
+            for backend in ("xla", "pallas"):
+                opts = EngineOptions(backend=backend)
+                res = run(prob, gg, pgg, opts)
+                t = time_call(lambda: run(prob, gg, pgg, opts))
+                row[f"{backend}_us"] = t * 1e6
+                row[f"{backend}_iters"] = res.iterations
+                row[f"{backend}_mteps"] = mteps(gg.num_edges, t)
+                emit(
+                    f"engine/{sname}/{pname}/{backend}",
+                    t * 1e6,
+                    f"iters={res.iterations} mteps={mteps(gg.num_edges, t):.2f} "
+                    f"interpret={backend == 'pallas'}",
+                )
+            # contributions-array traffic the fused path structurally avoids
+            itemsize = 4
+            row["xla_contrib_bytes_per_phase"] = pgg.p * pgg.edge_pad * itemsize
+            records.append(row)
+    JSON_PATH.write_text(json.dumps({"records": records}, indent=2) + "\n")
+    emit("engine/json", 0.0, f"wrote {JSON_PATH.name} ({len(records)} records)")

@@ -14,6 +14,8 @@ from repro.core.partition import PartitionConfig, partition_2d
 from repro.core.problems import bfs, pagerank, wcc
 
 
+# backend pinned to the XLA oracle: these figures isolate the paper's
+# algorithmic effects; fused-vs-XLA backend timings live in bench_engine.py
 def main(emit):
     problems = {
         "bfs": lambda root: bfs(root),
@@ -29,10 +31,10 @@ def main(emit):
             for p in (1, 2, 4):
                 # paper: stride mapping disabled for single-channel
                 stride = None if p == 1 else 100
-                pg = partition_2d(gg, PartitionConfig(p=p, l=4, lane=8, stride=stride))
+                pg = partition_2d(gg, PartitionConfig(p=p, l=4, lane=8, stride=stride, build_tiles=False))
                 prob = mk(root)
-                res = run(prob, gg, pg, EngineOptions())
-                t = time_call(lambda: run(prob, gg, pg, EngineOptions()))
+                res = run(prob, gg, pg, EngineOptions(backend="xla"))
+                t = time_call(lambda: run(prob, gg, pg, EngineOptions(backend="xla")))
                 if base is None:
                     base = t
                 emit(

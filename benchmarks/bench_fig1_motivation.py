@@ -28,9 +28,9 @@ def main(emit):
     # (b) convergence: async vs sync iterations (BFS)
     for name, (g0, root) in bench_graphs("tiny").items():
         g = G.symmetrize(g0)
-        pg = partition_2d(g, PartitionConfig(p=4, l=4, lane=8, stride=100))
-        it_async = run(bfs(root), g, pg, EngineOptions(immediate_updates=True)).iterations
-        it_sync = run(bfs(root), g, pg, EngineOptions(immediate_updates=False)).iterations
+        pg = partition_2d(g, PartitionConfig(p=4, l=4, lane=8, stride=100, build_tiles=False))
+        it_async = run(bfs(root), g, pg, EngineOptions(immediate_updates=True, backend="xla")).iterations
+        it_sync = run(bfs(root), g, pg, EngineOptions(immediate_updates=False, backend="xla")).iterations
         emit(
             f"fig1_convergence/{name}",
             0.0,

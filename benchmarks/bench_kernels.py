@@ -7,7 +7,11 @@ import numpy as np
 import jax.numpy as jnp
 
 from benchmarks.common import time_call
-from repro.kernels.csr_gather_reduce import gather_reduce, prepare_tiles
+from repro.kernels.csr_gather_reduce import (
+    gather_reduce,
+    gather_reduce_cores_pallas,
+    prepare_tiles,
+)
 from repro.kernels.csr_gather_reduce.ref import gather_reduce_reference
 from repro.kernels.embedding_bag import embedding_bag
 from repro.kernels.embedding_bag.ref import embedding_bag_reference
@@ -31,6 +35,27 @@ def main(emit):
     )
     emit("kernels/csr_gather_reduce/xla_ref", t_ref * 1e6,
          f"V={v} E={e} tile_pad={tiles.tile_padding_ratio:.2f}")
+    # fused Pallas path (interpret on CPU — correctness-grade timing) at the
+    # SAME shape: gather + map + reduce in one launch, no (E,) materialization
+    t_fused = time_call(
+        lambda: gather_reduce(jp, tiles, kind="sum", interpret=True).block_until_ready()
+    )
+    emit("kernels/csr_gather_reduce/pallas_interp", t_fused * 1e6,
+         f"V={v} E={e} vs_xla={t_fused / t_ref:.1f}x")
+    # multi-core fused launch (the engine hot path): p cores, one pallas_call
+    p = 4
+    tiles_p = prepare_tiles(src, dst, np.ones(e, bool), num_rows=v, vb=256, eb=512)
+    src_p = jnp.asarray(np.broadcast_to(tiles_p.src, (p,) + tiles_p.src.shape).copy())
+    dst_p = jnp.asarray(np.broadcast_to(tiles_p.dstb, (p,) + tiles_p.dstb.shape).copy())
+    val_p = jnp.asarray(np.broadcast_to(tiles_p.valid, (p,) + tiles_p.valid.shape).copy())
+    t_cores = time_call(
+        lambda: gather_reduce_cores_pallas(
+            jp, src_p, dst_p, val_p, None, num_rows=v, vb=256, kind="sum",
+            identity=0.0, interpret=True,
+        ).block_until_ready()
+    )
+    emit("kernels/csr_gather_reduce/pallas_cores_interp", t_cores * 1e6,
+         f"p={p} V={v} E={e * p} grid={p}x{tiles_p.src.shape[0]}x{tiles_p.src.shape[1]}")
     # analytic TPU tile cost: one-hot MXU matmul per tile
     r_blocks, t_tiles, eb = tiles.src.shape
     mxu_flops = r_blocks * t_tiles * 2 * tiles.vb * eb

@@ -8,6 +8,7 @@ import traceback
 
 def main() -> None:
     from benchmarks import (
+        bench_engine,
         bench_fig1_motivation,
         bench_fig9_optimizations,
         bench_fig10_scalability,
@@ -25,6 +26,7 @@ def main() -> None:
         bench_fig11_12_baseline,
         bench_table2_resources,
         bench_kernels,
+        bench_engine,
         bench_frontier,
         roofline_table,
     ]

@@ -1,0 +1,9 @@
+#!/usr/bin/env bash
+# CI entry point: tier-1 tests + engine bench smoke (same as `make check`).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+python -m pytest -x -q
+
+python -c "import benchmarks.bench_engine as b; b.main(lambda n, us, d='': print(f'{n},{us:.1f},{d}'))"

@@ -18,6 +18,26 @@ Execution structure per iteration (paper Fig. 4):
        end (synchronous / Jacobi).
 
 Shapes are static; invalid (padding) edges contribute the reduce identity.
+
+Two step-2 backends, selected by ``EngineOptions.backend``:
+
+  * ``'pallas'`` (default — the primary path): one fused ``pallas_call`` per
+    phase over grid (p, R, T) executes gather + edge map (incl. the SSSP
+    saturating add) + segment reduce per tile, with the phase's gathered
+    crossbar block resident in VMEM. Per-edge values only ever exist in
+    (Eb,)-tile registers — no (p, E_pad) contributions array is materialized
+    (the bandwidth property the paper's compressed accumulator is built
+    around; asserted by jaxpr inspection in tests). Consumes the partition-
+    time (p, l, R, T, Eb) tile layout on ``PartitionedGraph``; runs in
+    interpret mode on CPU (``kernel_interpret=True``, correctness-grade
+    timings) and compiled on real TPUs.
+  * ``'xla'`` — the correctness oracle: materializes the (p, E_pad)
+    contributions array via take/where and segment-reduces it. Bit-identical
+    to the Pallas path for min problems; for sum problems (PageRank) results
+    agree to float-summation-order reassociation.
+
+Edge-index constants are converted to device arrays ONCE per trace, outside
+the phase ``fori_loop`` body (they used to be re-wrapped per phase).
 """
 from __future__ import annotations
 
@@ -35,13 +55,22 @@ from repro.core.problems import Problem
 __all__ = ["EngineOptions", "EngineResult", "prepare_labels", "run", "unpad_labels"]
 
 
+_BACKENDS = ("pallas", "xla")
+
+
 @dataclasses.dataclass(frozen=True)
 class EngineOptions:
     immediate_updates: bool = True  # paper opt 1: async write-back to scratch
     prefetch_skipping: bool = True  # paper opt 2: skip re-prefetch when l == 1
     max_iters: int = 1000
-    use_kernel: bool = False  # route segment-reduce through the Pallas kernel
-    kernel_interpret: bool = True  # interpret mode (CPU validation)
+    # 'pallas': fused gather-map-reduce kernel, the primary path (one launch
+    # per phase covers all p cores). 'xla': materialize-then-reduce oracle.
+    backend: str = "pallas"
+    kernel_interpret: bool = True  # Pallas interpret mode (CPU); False on TPU
+
+    def __post_init__(self):
+        if self.backend not in _BACKENDS:
+            raise ValueError(f"backend must be one of {_BACKENDS}, got {self.backend!r}")
 
 
 @dataclasses.dataclass
@@ -99,56 +128,115 @@ def _segment_reduce(kind: str, contrib, dst, num_segments: int, identity):
     )
 
 
-def _phase_contributions(problem: Problem, pg: PartitionedGraph, labels, m, opts):
-    """Steps 1+2: prefetch (gather crossbar block) and process (map+reduce)."""
+def _edge_constants(problem: Problem, pg: PartitionedGraph, opts: EngineOptions):
+    """Device-array edge constants, converted ONCE (hoisted out of the traced
+    phase body — ``jnp.asarray`` on host numpy used to run inside it)."""
+    if opts.backend == "pallas":
+        if pg.tile_src is None:
+            raise ValueError(
+                "backend='pallas' needs the partition-time tile layout; "
+                "re-partition with partition_2d (tile_* fields are None)"
+            )
+        w = None
+        if problem.edge_op == "add":
+            w = (
+                jnp.asarray(pg.tile_weights)
+                if pg.tile_weights is not None
+                else jnp.ones(pg.tile_src.shape, jnp.float32)  # unit weights
+            )
+        return {
+            "src": jnp.asarray(pg.tile_src),  # (p, l, R, T, Eb)
+            "dstb": jnp.asarray(pg.tile_dstb),
+            "valid": jnp.asarray(pg.tile_valid),
+            "w": w,
+            "row_pos": jnp.asarray(pg.tile_row_pos)
+            if pg.tile_row_pos is not None
+            else None,  # (p, l, Vl)
+        }
+    w = jnp.asarray(pg.weights) if pg.weights is not None else None
+    return {
+        "src": jnp.asarray(pg.src_gidx),  # (p, l, E_pad)
+        "dst": jnp.asarray(pg.dst_lidx),
+        "valid": jnp.asarray(pg.valid),
+        "w": w,
+    }
+
+
+def _phase_reduce_pallas(problem, pg, consts, labels, m, opts):
+    """Steps 1+2, fused: prefetch the crossbar block, then ONE pallas_call
+    over grid (p, R, T) does gather + map UDF + segment reduce for all cores.
+    No (p, E_pad) per-edge array is materialized."""
+    from repro.kernels.csr_gather_reduce.kernel import gather_reduce_cores_pallas
+
     payload = problem.src_transform(labels)  # (p, Vl) elementwise
-    # prefetch phase: sub-interval m of every core -> gathered block (p*sub,)
+    sub = jax.lax.dynamic_slice_in_dim(payload, m * pg.sub_size, pg.sub_size, axis=1)
+    gathered = sub.reshape(pg.gathered_size)  # (G,) scratch pads
+
+    sg = jax.lax.dynamic_index_in_dim(consts["src"], m, axis=1, keepdims=False)
+    db = jax.lax.dynamic_index_in_dim(consts["dstb"], m, axis=1, keepdims=False)
+    vm = jax.lax.dynamic_index_in_dim(consts["valid"], m, axis=1, keepdims=False)
+    w = (
+        jax.lax.dynamic_index_in_dim(consts["w"], m, axis=1, keepdims=False)
+        if consts["w"] is not None
+        else None
+    )
+    reduced = gather_reduce_cores_pallas(
+        gathered,
+        sg,
+        db,
+        vm,
+        w,
+        num_rows=pg.vertices_per_core,
+        vb=pg.tile_vb,
+        kind=problem.reduce_kind,
+        edge_op=problem.edge_op,
+        identity=problem.identity,
+        interpret=opts.kernel_interpret,
+    )  # (p, Vl) in packed row space
+    if consts["row_pos"] is not None:  # undo degree-aware row packing
+        rp = jax.lax.dynamic_index_in_dim(consts["row_pos"], m, axis=1, keepdims=False)
+        reduced = jnp.take_along_axis(reduced, rp, axis=1)
+    return reduced
+
+
+def _phase_reduce_xla(problem, pg, consts, labels, m, opts):
+    """Steps 1+2, oracle: materialize (p, E_pad) contributions, then reduce."""
+    payload = problem.src_transform(labels)  # (p, Vl) elementwise
     sub = jax.lax.dynamic_slice_in_dim(payload, m * pg.sub_size, pg.sub_size, axis=1)
     gathered = sub.reshape(pg.gathered_size)
 
-    src_gidx = jnp.asarray(pg.src_gidx)  # (p, l, E)
-    dst_lidx = jnp.asarray(pg.dst_lidx)
-    valid = jnp.asarray(pg.valid)
-    sg = jax.lax.dynamic_index_in_dim(src_gidx, m, axis=1, keepdims=False)  # (p, E)
-    dl = jax.lax.dynamic_index_in_dim(dst_lidx, m, axis=1, keepdims=False)
-    vm = jax.lax.dynamic_index_in_dim(valid, m, axis=1, keepdims=False)
-    w = None
-    if pg.weights is not None:
-        w = jax.lax.dynamic_index_in_dim(jnp.asarray(pg.weights), m, axis=1, keepdims=False)
+    sg = jax.lax.dynamic_index_in_dim(consts["src"], m, axis=1, keepdims=False)
+    dl = jax.lax.dynamic_index_in_dim(consts["dst"], m, axis=1, keepdims=False)
+    vm = jax.lax.dynamic_index_in_dim(consts["valid"], m, axis=1, keepdims=False)
+    w = (
+        jax.lax.dynamic_index_in_dim(consts["w"], m, axis=1, keepdims=False)
+        if consts["w"] is not None
+        else None
+    )
 
     svals = jnp.take(gathered, sg, axis=0)  # (p, E) crossbar label reads
     contrib = problem.edge_map(svals, w)
     identity = jnp.asarray(problem.identity, dtype=contrib.dtype)
     contrib = jnp.where(vm, contrib, identity)
-
-    if opts.use_kernel:
-        from repro.kernels.csr_gather_reduce import ops as kops
-
-        reduced = kops.segment_reduce_rows(
-            contrib,
-            dl,
-            num_rows=pg.vertices_per_core,
-            kind=problem.reduce_kind,
-            identity=problem.identity,
-            interpret=opts.kernel_interpret,
+    return jax.vmap(
+        lambda c, d: _segment_reduce(
+            problem.reduce_kind, c, d, pg.vertices_per_core, identity
         )
-    else:
-        reduced = jax.vmap(
-            lambda c, d: _segment_reduce(
-                problem.reduce_kind, c, d, pg.vertices_per_core, identity
-            )
-        )(contrib, dl)  # (p, Vl)
-    return reduced
+    )(contrib, dl)  # (p, Vl)
 
 
 def _make_iteration(problem: Problem, pg: PartitionedGraph, opts: EngineOptions):
     is_min = problem.reduce_kind == "min"
+    consts = _edge_constants(problem, pg, opts)
+    reduce_fn = (
+        _phase_reduce_pallas if opts.backend == "pallas" else _phase_reduce_xla
+    )
 
     if is_min and opts.immediate_updates:
 
         def iteration(labels):
             def phase(m, labels):
-                reduced = _phase_contributions(problem, pg, labels, m, opts)
+                reduced = reduce_fn(problem, pg, consts, labels, m, opts)
                 lab = labels[problem.merge_field]
                 merged = jnp.minimum(lab, reduced.astype(lab.dtype))
                 new = dict(labels)
@@ -166,7 +254,7 @@ def _make_iteration(problem: Problem, pg: PartitionedGraph, opts: EngineOptions)
         acc0 = jnp.full(lab.shape, problem.identity, dtype=acc_dtype)
 
         def phase(m, acc):
-            reduced = _phase_contributions(problem, pg, labels, m, opts)
+            reduced = reduce_fn(problem, pg, consts, labels, m, opts)
             if problem.reduce_kind == "min":
                 return jnp.minimum(acc, reduced.astype(acc.dtype))
             return acc + reduced.astype(acc.dtype)

@@ -16,6 +16,14 @@ becomes a direct offset into the phase's gathered label block:
 ``gathered_idx = src_core * sub_size + (src mod sub_size)`` — the TPU analogue
 of the paper's "first log2(p) bits address the core" crossbar routing.
 
+On top of the (p, l, E_pad) bucket layout, ``partition_2d`` also precomputes
+the Pallas tile layout the fused engine hot path consumes: every (core, phase)
+bucket is binned into (R, T, Eb) row-block edge tiles (``prepare_tiles``) with
+degree-aware LPT row packing, then stacked into (p, l, R, T, Eb) arrays so one
+``pallas_call`` per phase runs all cores. ``tile_row_pos`` records the per-
+bucket row permutation the packing introduced (the engine un-permutes kernel
+output with one static gather).
+
 Everything here is host-side numpy; outputs are static-shape arrays.
 """
 from __future__ import annotations
@@ -46,6 +54,11 @@ class PartitionConfig:
     edge_pad: int = 8  # per-bucket edge-count alignment
     stride: Optional[int] = None  # stride mapping (paper uses 100); None = off
     scratch_size: Optional[int] = None  # if set, l is derived: labels per core phase
+    # fused-kernel tile layout (consumed by EngineOptions(backend='pallas')):
+    build_tiles: bool = True  # False skips the host-side binning (xla-only use)
+    tile_vb: Optional[int] = None  # row-block height; None = sub_size (R = l)
+    tile_eb: int = 128  # edge-tile width (lane quantum on real HW)
+    degree_aware_tiles: bool = True  # LPT row packing (see prepare_tiles)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -70,6 +83,14 @@ class PartitionedGraph:
     perm: Optional[np.ndarray]  # old -> new vertex id (stride mapping), or None
     inv_perm: Optional[np.ndarray]
     bucket_sizes: np.ndarray  # (p, l) int64 — real edges per sub-partition
+    # stacked fused-kernel tile layout (one TileLayout per bucket, uniform
+    # (R, T) so all p cores of a phase launch as one pallas_call grid):
+    tile_src: Optional[np.ndarray] = None  # (p, l, R, T, Eb) int32
+    tile_dstb: Optional[np.ndarray] = None  # (p, l, R, T, Eb) int32 in [0, vb)
+    tile_valid: Optional[np.ndarray] = None  # (p, l, R, T, Eb) bool
+    tile_weights: Optional[np.ndarray] = None  # (p, l, R, T, Eb) f32 or None
+    tile_row_pos: Optional[np.ndarray] = None  # (p, l, Vl) int32 or None
+    tile_vb: int = 0  # row-block height (0 = tiles not built)
 
     @property
     def vertices_per_core(self) -> int:
@@ -99,6 +120,16 @@ class PartitionedGraph:
         """max/mean real edges over buckets (1.0 = perfectly balanced)."""
         mean = self.bucket_sizes.mean()
         return float(self.bucket_sizes.max() / mean) if mean > 0 else 1.0
+
+    @property
+    def tile_padding_ratio(self) -> float:
+        """Padded-slot fraction of the fused-kernel tile layout — what
+        degree-aware row packing minimizes (hub rows no longer set T for
+        every row block)."""
+        if self.tile_valid is None:
+            return 0.0
+        total = self.tile_valid.size
+        return 1.0 - float(self.tile_valid.sum()) / max(total, 1)
 
 
 def stride_permutation(num_vertices: int, stride: int = 100) -> np.ndarray:
@@ -188,6 +219,14 @@ def partition_2d(g: COOGraph, cfg: PartitionConfig) -> PartitionedGraph:
             if weights is not None:
                 weights[i, m, :n] = w[s:e]
 
+    tiles = (
+        _build_tile_layouts(
+            p, l, vpc, src_gidx, dst_lidx, valid, weights, cfg, sub_size
+        )
+        if cfg.build_tiles
+        else {}
+    )
+
     return PartitionedGraph(
         p=p,
         l=l,
@@ -201,6 +240,63 @@ def partition_2d(g: COOGraph, cfg: PartitionConfig) -> PartitionedGraph:
         perm=perm,
         inv_perm=inv,
         bucket_sizes=sizes,
+        **tiles,
+    )
+
+
+def _build_tile_layouts(p, l, vpc, src_gidx, dst_lidx, valid, weights, cfg, sub_size):
+    """Bin every (core, phase) bucket into (R, T, Eb) row-block tiles and stack
+    to (p, l, R, T, Eb) with a uniform T (max over buckets, padded valid=False)
+    so the engine launches all cores of a phase in one pallas_call."""
+    from repro.kernels.csr_gather_reduce.ops import prepare_tiles
+
+    vb = cfg.tile_vb if cfg.tile_vb is not None else sub_size
+    assert vpc % vb == 0, (vpc, vb)
+    eb = cfg.tile_eb
+    layouts = [
+        [
+            prepare_tiles(
+                src_gidx[i, m], dst_lidx[i, m], valid[i, m],
+                num_rows=vpc, vb=vb, eb=eb,
+                weights=weights[i, m] if weights is not None else None,
+                balance_rows=cfg.degree_aware_tiles,
+            )
+            for m in range(l)
+        ]
+        for i in range(p)
+    ]
+    r_blocks = vpc // vb
+    t_max = max(t.src.shape[1] for row in layouts for t in row)
+    tile_src = np.zeros((p, l, r_blocks, t_max, eb), dtype=np.int32)
+    tile_dstb = np.zeros((p, l, r_blocks, t_max, eb), dtype=np.int32)
+    tile_valid = np.zeros((p, l, r_blocks, t_max, eb), dtype=bool)
+    tile_weights = (
+        np.zeros((p, l, r_blocks, t_max, eb), dtype=np.float32)
+        if weights is not None
+        else None
+    )
+    any_packed = any(t.row_pos is not None for row in layouts for t in row)
+    tile_row_pos = (
+        np.tile(np.arange(vpc, dtype=np.int32), (p, l, 1)) if any_packed else None
+    )
+    for i in range(p):
+        for m in range(l):
+            t = layouts[i][m]
+            tt = t.src.shape[1]
+            tile_src[i, m, :, :tt] = t.src
+            tile_dstb[i, m, :, :tt] = t.dstb
+            tile_valid[i, m, :, :tt] = t.valid
+            if tile_weights is not None and t.weights is not None:
+                tile_weights[i, m, :, :tt] = t.weights
+            if tile_row_pos is not None and t.row_pos is not None:
+                tile_row_pos[i, m] = t.row_pos
+    return dict(
+        tile_src=tile_src,
+        tile_dstb=tile_dstb,
+        tile_valid=tile_valid,
+        tile_weights=tile_weights,
+        tile_row_pos=tile_row_pos,
+        tile_vb=vb,
     )
 
 

@@ -47,8 +47,13 @@ class Problem:
     src_transform: Callable[[LabelTree], jnp.ndarray]
     # device-side map UDF, edge half: (payload_at_src, edge_weight|None) -> contribution
     edge_map: Callable[[jnp.ndarray, Optional[jnp.ndarray]], jnp.ndarray]
+    # declarative form of ``edge_map`` for the fused Pallas path: 'none' means
+    # the contribution IS the payload (BFS/WCC/PR, whose per-source work lives
+    # in ``src_transform``); 'add' is the saturating min-plus weight add (SSSP).
+    # ``edge_map`` stays the oracle the XLA path executes.
+    edge_op: str = "none"
     # identity element of the reduce UDF
-    identity: float
+    identity: float = 0.0
     # iteration finalize for sum problems: (labels, accumulated) -> new labels
     finalize: Optional[Callable[[LabelTree, jnp.ndarray], LabelTree]] = None
     # convergence: (old, new) -> bool scalar (True = keep iterating)
@@ -145,6 +150,7 @@ def sssp(root: int) -> Problem:
         init_labels=init,
         src_transform=lambda labels: labels["label"],
         edge_map=edge_map,
+        edge_op="add",
         identity=float(INF_F32),
         not_converged=not_conv,
     )

@@ -1,5 +1,8 @@
 from repro.kernels.csr_gather_reduce import ops, ref  # noqa: F401
-from repro.kernels.csr_gather_reduce.kernel import gather_reduce_pallas  # noqa: F401
+from repro.kernels.csr_gather_reduce.kernel import (  # noqa: F401
+    gather_reduce_cores_pallas,
+    gather_reduce_pallas,
+)
 from repro.kernels.csr_gather_reduce.ops import (  # noqa: F401
     TileLayout,
     gather_reduce,

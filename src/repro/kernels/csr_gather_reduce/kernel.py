@@ -20,6 +20,17 @@ paper's two-dimensional partitioning, one level down.
 
 Blocks: Eb multiple of 128 (lanes), Vb multiple of 8 (sublanes) on real TPU;
 tests run interpret=True on CPU with relaxed sizes.
+
+Two entry points share the tile body:
+
+  * ``gather_reduce_pallas``  — one (core, phase) bucket, grid (R, T).
+  * ``gather_reduce_cores_pallas`` — the engine's fused hot path: a leading
+    core grid dimension runs ALL ``p`` graph cores of one phase in a single
+    ``pallas_call`` over grid (p, R, T). The phase's gathered crossbar block
+    (shape (G,) = (p * sub_size,), shared by every core exactly like the
+    paper's broadcast crossbar) stays resident in VMEM for the whole launch;
+    per-edge state never exists outside the (1, 1, 1, Eb) tile registers, so
+    no (p, E_pad) contributions array is ever materialized in HBM.
 """
 from __future__ import annotations
 
@@ -29,7 +40,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["gather_reduce_pallas"]
+__all__ = ["gather_reduce_pallas", "gather_reduce_cores_pallas"]
 
 
 def _accumulate(kind: str, edge_op: str, payload, src, dstb, val, w, acc, identity, vb: int):
@@ -119,6 +130,89 @@ def gather_reduce_pallas(
         interpret=interpret,
         compiler_params=dict(
             mosaic=dict(dimension_semantics=("arbitrary", "arbitrary"))
+        )
+        if not interpret
+        else None,
+    )(*args)
+
+
+def _cores_kernel(src_ref, dst_ref, val_ref, w_ref, payload_ref, out_ref, *, kind, edge_op, identity, vb):
+    t = pl.program_id(2)
+
+    @pl.when(t == 0)
+    def _init():
+        out_ref[...] = jnp.full_like(out_ref[...], identity)
+
+    src = src_ref[0, 0, 0, :]
+    dstb = dst_ref[0, 0, 0, :].astype(jnp.int32)
+    val = val_ref[0, 0, 0, :]
+    w = w_ref[0, 0, 0, :] if w_ref is not None else None
+    payload = payload_ref[...]
+    acc = out_ref[0, :]
+    out_ref[0, :] = _accumulate(
+        kind, edge_op, payload, src, dstb, val, w, acc, identity, vb
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("num_rows", "vb", "kind", "edge_op", "identity", "interpret"),
+)
+def gather_reduce_cores_pallas(
+    payload: jnp.ndarray,  # (G,) phase-gathered crossbar block, shared by cores
+    src: jnp.ndarray,  # (p, R, T, Eb) int32 into payload
+    dstb: jnp.ndarray,  # (p, R, T, Eb) int32 row index WITHIN block [0, Vb)
+    valid: jnp.ndarray,  # (p, R, T, Eb) bool
+    weights: jnp.ndarray | None = None,  # (p, R, T, Eb) f32 (edge_op == 'add')
+    *,
+    num_rows: int,  # rows per core (= vertices_per_core)
+    vb: int,
+    kind: str = "min",
+    edge_op: str = "none",
+    identity: float = 0.0,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """All-cores accumulator: grid (p, R, T) -> (p, num_rows) reductions.
+
+    Core ``c``'s output rows [r*vb, (r+1)*vb) are revisited across the T edge
+    tiles of row block r (buffered writer) and written to HBM once; VMEM holds
+    one (Eb,) edge tile per operand plus the (G,) scratch pad at any time.
+    """
+    p, r_blocks, t_tiles, eb = src.shape
+    assert r_blocks * vb == num_rows, (src.shape, vb, num_rows)
+    g = payload.shape[0]
+
+    edge_block = pl.BlockSpec((1, 1, 1, eb), lambda c, r, t: (c, r, t, 0))
+    in_specs = [
+        edge_block,
+        edge_block,
+        edge_block,
+        edge_block if weights is not None else None,
+        pl.BlockSpec((g,), lambda c, r, t: (0,)),  # whole scratch pad resident
+    ]
+    if weights is None:
+        def kern(src_ref, dst_ref, val_ref, payload_ref, out_ref):
+            _cores_kernel(
+                src_ref, dst_ref, val_ref, None, payload_ref, out_ref,
+                kind=kind, edge_op=edge_op, identity=identity, vb=vb,
+            )
+        in_specs = [s for s in in_specs if s is not None]
+        args = (src, dstb, valid, payload)
+    else:
+        kern = functools.partial(
+            _cores_kernel, kind=kind, edge_op=edge_op, identity=identity, vb=vb
+        )
+        args = (src, dstb, valid, weights, payload)
+
+    return pl.pallas_call(
+        kern,
+        grid=(p, r_blocks, t_tiles),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, vb), lambda c, r, t: (c, r)),
+        out_shape=jax.ShapeDtypeStruct((p, num_rows), payload.dtype),
+        interpret=interpret,
+        compiler_params=dict(
+            mosaic=dict(dimension_semantics=("arbitrary", "arbitrary", "arbitrary"))
         )
         if not interpret
         else None,

@@ -33,11 +33,33 @@ class TileLayout:
     # Lets runtime-traced per-edge values (e.g. GAT scores) be laid out into
     # tile order with one static gather.
     gather_idx: np.ndarray | None = None  # (R, T, Eb) int64
+    # degree-aware packing: natural row i's reduction lives at kernel-output
+    # position row_pos[i] (None = identity layout). Undo with out[row_pos].
+    row_pos: np.ndarray | None = None  # (num_rows,) int32
 
     @property
     def tile_padding_ratio(self) -> float:
         total = self.valid.size
         return 1.0 - float(self.valid.sum()) / max(total, 1)
+
+
+def _balance_row_blocks(row_counts: np.ndarray, r_blocks: int, vb: int) -> np.ndarray:
+    """LPT row->block assignment: rows sorted by in-degree, each placed in the
+    least-loaded block with a free slot. Minimizes the max per-block edge count
+    so one hub row no longer inflates T for EVERY row block. Returns row_pos
+    (natural row -> packed output position)."""
+    order = np.argsort(-row_counts, kind="stable")
+    load = np.zeros(r_blocks, dtype=np.int64)
+    slots = np.zeros(r_blocks, dtype=np.int64)
+    row_pos = np.empty(row_counts.shape[0], dtype=np.int32)
+    full = np.int64(np.iinfo(np.int64).max)
+    for row in order:
+        cand = np.where(slots < vb, load, full)
+        b = int(cand.argmin())
+        row_pos[row] = b * vb + slots[b]
+        slots[b] += 1
+        load[b] += row_counts[row]
+    return row_pos
 
 
 def prepare_tiles(
@@ -48,6 +70,8 @@ def prepare_tiles(
     vb: int,
     eb: int,
     weights: np.ndarray | None = None,
+    *,
+    balance_rows: bool = False,
 ) -> TileLayout:
     assert num_rows % vb == 0, (num_rows, vb)
     r_blocks = num_rows // vb
@@ -60,8 +84,20 @@ def prepare_tiles(
     src_r = src_gidx[keep]
     dst_r = dst_lidx[keep]
     w_r = weights[keep] if weights is not None else None
-    block = dst_r // vb
-    # edges are dst-sorted => block ids are non-decreasing; stable layout
+    row_pos = None
+    if balance_rows and r_blocks > 1:
+        row_counts = np.bincount(dst_r, minlength=num_rows)
+        row_pos = _balance_row_blocks(row_counts, r_blocks, vb)
+        pdst = row_pos[dst_r]
+        # packed positions are not sorted; regroup by block, keeping the
+        # original (dst-sorted) edge order inside each block (stable).
+        order = np.argsort(pdst // vb, kind="stable")
+        src_r, pdst, orig_idx = src_r[order], pdst[order], orig_idx[order]
+        if w_r is not None:
+            w_r = w_r[order]
+    else:
+        pdst = dst_r
+    block = pdst // vb
     counts = np.bincount(block, minlength=r_blocks)
     t_tiles = max(1, int(-(-counts.max() // eb))) if counts.size else 1
     src_t = np.zeros((r_blocks, t_tiles, eb), dtype=np.int32)
@@ -75,14 +111,14 @@ def prepare_tiles(
         s, e = int(starts[r]), int(starts[r + 1])
         n = e - s
         src_t[r].reshape(-1)[:n] = src_r[s:e]
-        dst_t[r].reshape(-1)[:n] = dst_r[s:e] - r * vb
+        dst_t[r].reshape(-1)[:n] = pdst[s:e] - r * vb
         val_t[r].reshape(-1)[:n] = True
         gat_t[r].reshape(-1)[:n] = orig_idx[s:e]
         if w_t is not None:
             w_t[r].reshape(-1)[:n] = w_r[s:e]
     return TileLayout(
         src=src_t, dstb=dst_t, valid=val_t, weights=w_t, vb=vb,
-        num_rows=num_rows, gather_idx=gat_t,
+        num_rows=num_rows, gather_idx=gat_t, row_pos=row_pos,
     )
 
 
@@ -100,7 +136,7 @@ def gather_reduce(
     if use_reference:
         r_blocks = tiles.src.shape[0]
         block_base = np.arange(r_blocks, dtype=np.int32)[:, None, None] * tiles.vb
-        return gather_reduce_reference(
+        out = gather_reduce_reference(
             payload,
             jnp.asarray(tiles.src).reshape(-1),
             jnp.asarray(tiles.dstb + block_base).reshape(-1),
@@ -112,19 +148,23 @@ def gather_reduce(
             if tiles.weights is not None and edge_op == "add"
             else None,
         )
-    return gather_reduce_pallas(
-        payload,
-        jnp.asarray(tiles.src),
-        jnp.asarray(tiles.dstb),
-        jnp.asarray(tiles.valid),
-        jnp.asarray(tiles.weights) if tiles.weights is not None else None,
-        num_rows=tiles.num_rows,
-        vb=tiles.vb,
-        kind=kind,
-        edge_op=edge_op,
-        identity=identity,
-        interpret=interpret,
-    )
+    else:
+        out = gather_reduce_pallas(
+            payload,
+            jnp.asarray(tiles.src),
+            jnp.asarray(tiles.dstb),
+            jnp.asarray(tiles.valid),
+            jnp.asarray(tiles.weights) if tiles.weights is not None else None,
+            num_rows=tiles.num_rows,
+            vb=tiles.vb,
+            kind=kind,
+            edge_op=edge_op,
+            identity=identity,
+            interpret=interpret,
+        )
+    if tiles.row_pos is not None:  # undo degree-aware row packing
+        out = jnp.take(out, jnp.asarray(tiles.row_pos), axis=0)
+    return out
 
 
 def segment_reduce_rows(
@@ -136,7 +176,10 @@ def segment_reduce_rows(
     identity: float,
     interpret: bool = True,
 ) -> jnp.ndarray:
-    """Reduce-only engine fallback (traced dst => no host binning): XLA path."""
+    """Reduce-only helper for already-materialized contributions (traced dst
+    => no host binning). The engine no longer routes through this — its XLA
+    oracle calls segment ops directly and its primary path is the fused
+    ``gather_reduce_cores_pallas`` — kept as public API for model code."""
     def seg(c, d):
         if kind == "min":
             return jax.ops.segment_min(c, d, num_segments=num_rows, indices_are_sorted=True)

@@ -1,0 +1,73 @@
+"""Minimal stand-in for ``hypothesis`` when it is not installed.
+
+The container image cannot pip-install, so property tests degrade to
+deterministic random-example sweeps: ``@given`` draws ``max_examples``
+pseudo-random examples from the strategies with an rng seeded by the test
+name (stable across runs — failures are reproducible, not flaky). Install
+``hypothesis`` (see requirements-dev.txt) to get real shrinking/search.
+
+Only the surface the test suite uses is implemented: ``given``, ``settings``
+(max_examples, deadline ignored), ``strategies.integers / sampled_from /
+booleans``.
+"""
+from __future__ import annotations
+
+import functools
+import zlib
+
+import numpy as np
+
+__version__ = "0.0-fallback"
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng):
+        return self._draw(rng)
+
+
+def integers(min_value, max_value):
+    return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+
+def sampled_from(elements):
+    elements = list(elements)
+    return _Strategy(lambda rng: elements[int(rng.integers(0, len(elements)))])
+
+
+def booleans():
+    return _Strategy(lambda rng: bool(rng.integers(0, 2)))
+
+
+class strategies:  # mirrors `from hypothesis import strategies as st`
+    integers = staticmethod(integers)
+    sampled_from = staticmethod(sampled_from)
+    booleans = staticmethod(booleans)
+
+
+def settings(max_examples=10, deadline=None, **_ignored):
+    def deco(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(**strategy_kwargs):
+    def deco(fn):
+        n = getattr(fn, "_fallback_max_examples", 10)
+
+        # zero-arg wrapper: strategy args must NOT look like pytest fixtures
+        @functools.wraps(fn)
+        def wrapper():
+            rng = np.random.default_rng(zlib.crc32(fn.__name__.encode()))
+            for _ in range(n):
+                drawn = {k: s.example(rng) for k, s in strategy_kwargs.items()}
+                fn(**drawn)
+
+        del wrapper.__wrapped__  # keep pytest from seeing fn's signature
+        return wrapper
+
+    return deco

@@ -9,6 +9,20 @@ import pytest
 
 FLAGS = "--xla_force_host_platform_device_count=8"
 
+# these tests exercise repro.dist inside their subprocess snippets, so the
+# missing package surfaces at runtime, not collection (see ROADMAP Open items)
+from conftest import requires_dist  # noqa: F401
+
+# the multi-device engine targets jax >= 0.6 (jax.shard_map, AxisType,
+# check_vma); this container ships 0.4.37 (see ROADMAP Open items)
+import jax  # noqa: E402
+
+requires_modern_jax = pytest.mark.skipif(
+    not hasattr(jax, "shard_map") or not hasattr(jax.sharding, "AxisType"),
+    reason="installed jax lacks jax.shard_map/AxisType required by the "
+    "multi-device engine (see ROADMAP.md Open items)",
+)
+
 
 def run_sub(code: str):
     res = subprocess.run(
@@ -30,6 +44,7 @@ mesh4 = jax.make_mesh((4,), ("graph",), axis_types=(jax.sharding.AxisType.Auto,)
 """
 
 
+@requires_modern_jax
 def test_distributed_engine_matches_single_process():
     run_sub(
         PRELUDE
@@ -58,6 +73,7 @@ print("OK")
     )
 
 
+@requires_dist
 def test_crossbar_embedding_lookup():
     run_sub(
         PRELUDE
@@ -78,6 +94,7 @@ print("OK")
     )
 
 
+@requires_dist
 def test_compressed_psum_dp_training_converges():
     """Pure-DP shard_map training with int8 error-feedback gradient
     compression across the (slow) axis still converges on a toy problem."""
@@ -116,6 +133,7 @@ print("OK", err)
     )
 
 
+@requires_dist
 def test_graphscale_gnn_aggregation():
     """Distributed feature aggregation over the 2-D-partitioned crossbar
     engine equals the dense segment_sum oracle."""
@@ -143,6 +161,7 @@ print("OK")
     )
 
 
+@requires_dist
 def test_crossbar_property_random_routing():
     """Hypothesis-style randomized crossbar check in one subprocess: random
     table sizes, id distributions (uniform/skewed/padding-heavy), and
@@ -194,6 +213,7 @@ print("OK")
     )
 
 
+@requires_modern_jax
 def test_frontier_compressed_engine_matches_dense():
     """Beyond-paper frontier exchange (DESIGN.md §7.1): identical fixed point
     to the dense crossbar, wire reduction on high-diameter graphs, safe
@@ -222,6 +242,7 @@ print("OK", stats["reduction"], stats2["reduction"])
     )
 
 
+@requires_dist
 def test_gat_graphscale_matches_dense_reference():
     """GAT on the paper's dst-partitioned layout (hillclimb cell C) equals
     the dense single-device GAT bit-for-bit (within f32 tolerance)."""
@@ -267,6 +288,7 @@ print("OK")
     )
 
 
+@requires_dist
 def test_crossbar_full_mesh_lookup():
     """Full two-level crossbar: table rows sharded over the WHOLE mesh
     (hillclimb cell B it2) matches plain gather."""
@@ -299,6 +321,7 @@ print("OK")
     )
 
 
+@requires_dist
 def test_lm_sharded_train_step_runs():
     """A reduced LM train step executes (not just compiles) on a 2x4 mesh
     with the production sharding rules."""

@@ -201,15 +201,21 @@ def test_edge_centric_equals_sync_iterations(small_graphs):
     assert sync.iterations == ec.iterations
 
 
-def test_engine_kernel_route_matches_xla(small_graphs):
-    """EngineOptions(use_kernel=True) routes the segment reduce through the
-    kernels package and must match the XLA path exactly."""
+def test_engine_backend_route_matches_xla(small_graphs):
+    """EngineOptions(backend='pallas') routes the whole gather-map-reduce
+    phase through the fused kernel and must match the XLA oracle exactly
+    (min reduce: no float reassociation)."""
     g = G.symmetrize(small_graphs["karate"])
     pg = partition_2d(g, PartitionConfig(p=2, l=2, lane=4))
-    a = run(bfs(0), g, pg, EngineOptions(use_kernel=False))
-    b = run(bfs(0), g, pg, EngineOptions(use_kernel=True))
+    a = run(bfs(0), g, pg, EngineOptions(backend="xla"))
+    b = run(bfs(0), g, pg, EngineOptions(backend="pallas"))
     assert np.array_equal(a.labels["label"], b.labels["label"])
     assert a.iterations == b.iterations
+
+
+def test_engine_options_rejects_unknown_backend():
+    with pytest.raises(ValueError):
+        EngineOptions(backend="tpu")
 
 
 @given(

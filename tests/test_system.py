@@ -114,6 +114,10 @@ def test_registry_has_all_ten_archs():
         assert len(arch.shapes) == 4
 
 
+from conftest import requires_dist  # noqa: E402
+
+
+@requires_dist
 def test_all_cells_build_on_mini_mesh():
     """Cell construction (struct trees, spec trees, shardings) for every
     (arch x shape) — catches tree-structure mismatches without compiling."""
