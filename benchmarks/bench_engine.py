@@ -6,7 +6,10 @@ root so the perf trajectory is recorded across PRs. On this CPU container the
 Pallas numbers are interpret-mode (correctness-grade, expected slower); the
 structural win the JSON also records is the traffic model: bytes the XLA path
 materializes for the (p, E_pad) contributions array that the fused path never
-writes, plus tile padding with/without degree-aware packing.
+writes, the compressed stream's index bytes per edge (packed word vs the
+9-byte uncompressed triple) and skipped-tile fraction (padding tiles the
+kernel's scalar-prefetched early-out never streams), plus tile padding
+with/without degree-aware packing.
 """
 from __future__ import annotations
 
@@ -41,8 +44,11 @@ def main(emit):
             )
             row = {"graph": sname, "problem": pname, "V": gg.num_vertices,
                    "E": gg.num_edges, "p": pgg.p, "l": pgg.l,
-                   "tile_shape": list(pgg.tile_src.shape),
-                   "tile_padding_ratio": pgg.tile_padding_ratio}
+                   "tile_shape": list(pgg.tile_word.shape),
+                   "tile_padding_ratio": pgg.tile_padding_ratio,
+                   "src_bits": pgg.src_bits,
+                   "stream_bytes_per_edge": pgg.stream_bytes_per_edge,
+                   "skipped_tile_fraction": pgg.skipped_tile_fraction}
             for backend in ("xla", "pallas"):
                 opts = EngineOptions(backend=backend)
                 res = run(prob, gg, pgg, opts)

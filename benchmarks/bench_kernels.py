@@ -8,9 +8,11 @@ import jax.numpy as jnp
 
 from benchmarks.common import time_call
 from repro.kernels.csr_gather_reduce import (
+    choose_src_bits,
     gather_reduce,
     gather_reduce_cores_pallas,
     prepare_tiles,
+    stack_packed_tiles,
 )
 from repro.kernels.csr_gather_reduce.ref import gather_reduce_reference
 from repro.kernels.embedding_bag import embedding_bag
@@ -43,19 +45,22 @@ def main(emit):
     emit("kernels/csr_gather_reduce/pallas_interp", t_fused * 1e6,
          f"V={v} E={e} vs_xla={t_fused / t_ref:.1f}x")
     # multi-core fused launch (the engine hot path): p cores, one pallas_call
+    # over the COMPRESSED word stream with tile-count skipping
     p = 4
     tiles_p = prepare_tiles(src, dst, np.ones(e, bool), num_rows=v, vb=256, eb=512)
-    src_p = jnp.asarray(np.broadcast_to(tiles_p.src, (p,) + tiles_p.src.shape).copy())
-    dst_p = jnp.asarray(np.broadcast_to(tiles_p.dstb, (p,) + tiles_p.dstb.shape).copy())
-    val_p = jnp.asarray(np.broadcast_to(tiles_p.valid, (p,) + tiles_p.valid.shape).copy())
+    bits = choose_src_bits(g, 256)
+    word, word_hi, counts, _ = stack_packed_tiles([tiles_p] * p, src_bits=bits)
     t_cores = time_call(
         lambda: gather_reduce_cores_pallas(
-            jp, src_p, dst_p, val_p, None, num_rows=v, vb=256, kind="sum",
-            identity=0.0, interpret=True,
+            jp, jnp.asarray(word), jnp.asarray(counts),
+            jnp.asarray(word_hi) if word_hi is not None else None,
+            None, num_rows=v, vb=256, src_bits=bits,
+            kind="sum", identity=0.0, interpret=True,
         ).block_until_ready()
     )
     emit("kernels/csr_gather_reduce/pallas_cores_interp", t_cores * 1e6,
-         f"p={p} V={v} E={e * p} grid={p}x{tiles_p.src.shape[0]}x{tiles_p.src.shape[1]}")
+         f"p={p} V={v} E={e * p} grid={p}x{word.shape[1]}x{word.shape[2]} "
+         f"src_bits={bits} stream_B_per_edge={4 * (1 if word_hi is None else 2)}")
     # analytic TPU tile cost: one-hot MXU matmul per tile
     r_blocks, t_tiles, eb = tiles.src.shape
     mxu_flops = r_blocks * t_tiles * 2 * tiles.vb * eb

@@ -4,6 +4,12 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+# repo hygiene: bytecode must never be tracked (PR 1 accidentally committed 10)
+if git ls-files | grep -E '(^|/)__pycache__/|\.pyc$'; then
+    echo "error: compiled Python files are tracked; git rm --cached them" >&2
+    exit 1
+fi
+
 python -m pytest -x -q
 
 python -c "import benchmarks.bench_engine as b; b.main(lambda n, us, d='': print(f'{n},{us:.1f},{d}'))"

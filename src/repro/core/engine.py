@@ -24,13 +24,18 @@ Two step-2 backends, selected by ``EngineOptions.backend``:
   * ``'pallas'`` (default — the primary path): one fused ``pallas_call`` per
     phase over grid (p, R, T) executes gather + edge map (incl. the SSSP
     saturating add) + segment reduce per tile, with the phase's gathered
-    crossbar block resident in VMEM. Per-edge values only ever exist in
-    (Eb,)-tile registers — no (p, E_pad) contributions array is materialized
-    (the bandwidth property the paper's compressed accumulator is built
-    around; asserted by jaxpr inspection in tests). Consumes the partition-
-    time (p, l, R, T, Eb) tile layout on ``PartitionedGraph``; runs in
-    interpret mode on CPU (``kernel_interpret=True``, correctness-grade
-    timings) and compiled on real TPUs.
+    crossbar block resident in VMEM. The edge stream it reads is COMPRESSED
+    (paper §III): each slot is one bit-packed int32 word (src | dstb | valid,
+    decoded in-kernel; ``tile_word_hi`` carries the 32-bit-src fallback) and
+    scalar-prefetched per-row-block tile counts let the kernel skip padding
+    tiles outright. Per-edge values only ever exist in (Eb,)-tile registers —
+    neither a (p, E_pad) contributions array nor an unpacked per-edge index
+    array is materialized (the bandwidth property the paper's compressed
+    accumulator is built around; asserted by jaxpr inspection in tests).
+    Consumes the partition-time (p, l, R, T, Eb) packed stream on
+    ``PartitionedGraph``; runs in interpret mode on CPU
+    (``kernel_interpret=True``, correctness-grade timings) and compiled on
+    real TPUs.
   * ``'xla'`` — the correctness oracle: materializes the (p, E_pad)
     contributions array via take/where and segment-reduces it. Bit-identical
     to the Pallas path for min problems; for sum problems (PageRank) results
@@ -132,22 +137,25 @@ def _edge_constants(problem: Problem, pg: PartitionedGraph, opts: EngineOptions)
     """Device-array edge constants, converted ONCE (hoisted out of the traced
     phase body — ``jnp.asarray`` on host numpy used to run inside it)."""
     if opts.backend == "pallas":
-        if pg.tile_src is None:
+        if pg.tile_word is None:
             raise ValueError(
-                "backend='pallas' needs the partition-time tile layout; "
+                "backend='pallas' needs the partition-time packed edge stream; "
                 "re-partition with partition_2d (tile_* fields are None)"
             )
-        w = None
-        if problem.edge_op == "add":
-            w = (
-                jnp.asarray(pg.tile_weights)
-                if pg.tile_weights is not None
-                else jnp.ones(pg.tile_src.shape, jnp.float32)  # unit weights
-            )
+        # weightless edge_op='add' streams NO weight array at all: the kernel
+        # adds a constant 1.0 in registers (used to allocate a full-tile-shape
+        # jnp.ones on every call here).
+        w = (
+            jnp.asarray(pg.tile_weights)
+            if problem.edge_op == "add" and pg.tile_weights is not None
+            else None
+        )
         return {
-            "src": jnp.asarray(pg.tile_src),  # (p, l, R, T, Eb)
-            "dstb": jnp.asarray(pg.tile_dstb),
-            "valid": jnp.asarray(pg.tile_valid),
+            "word": jnp.asarray(pg.tile_word),  # (p, l, R, T, Eb) packed
+            "word_hi": jnp.asarray(pg.tile_word_hi)
+            if pg.tile_word_hi is not None
+            else None,
+            "counts": jnp.asarray(pg.tile_counts),  # (p, l, R)
             "w": w,
             "row_pos": jnp.asarray(pg.tile_row_pos)
             if pg.tile_row_pos is not None
@@ -164,7 +172,8 @@ def _edge_constants(problem: Problem, pg: PartitionedGraph, opts: EngineOptions)
 
 def _phase_reduce_pallas(problem, pg, consts, labels, m, opts):
     """Steps 1+2, fused: prefetch the crossbar block, then ONE pallas_call
-    over grid (p, R, T) does gather + map UDF + segment reduce for all cores.
+    over grid (p, R, T) does unpack + gather + map UDF + segment reduce for
+    all cores, reading the compressed word stream and skipping padding tiles.
     No (p, E_pad) per-edge array is materialized."""
     from repro.kernels.csr_gather_reduce.kernel import gather_reduce_cores_pallas
 
@@ -172,9 +181,13 @@ def _phase_reduce_pallas(problem, pg, consts, labels, m, opts):
     sub = jax.lax.dynamic_slice_in_dim(payload, m * pg.sub_size, pg.sub_size, axis=1)
     gathered = sub.reshape(pg.gathered_size)  # (G,) scratch pads
 
-    sg = jax.lax.dynamic_index_in_dim(consts["src"], m, axis=1, keepdims=False)
-    db = jax.lax.dynamic_index_in_dim(consts["dstb"], m, axis=1, keepdims=False)
-    vm = jax.lax.dynamic_index_in_dim(consts["valid"], m, axis=1, keepdims=False)
+    word = jax.lax.dynamic_index_in_dim(consts["word"], m, axis=1, keepdims=False)
+    hi = (
+        jax.lax.dynamic_index_in_dim(consts["word_hi"], m, axis=1, keepdims=False)
+        if consts["word_hi"] is not None
+        else None
+    )
+    counts = jax.lax.dynamic_index_in_dim(consts["counts"], m, axis=1, keepdims=False)
     w = (
         jax.lax.dynamic_index_in_dim(consts["w"], m, axis=1, keepdims=False)
         if consts["w"] is not None
@@ -182,12 +195,13 @@ def _phase_reduce_pallas(problem, pg, consts, labels, m, opts):
     )
     reduced = gather_reduce_cores_pallas(
         gathered,
-        sg,
-        db,
-        vm,
+        word,
+        counts,
+        hi,
         w,
         num_rows=pg.vertices_per_core,
         vb=pg.tile_vb,
+        src_bits=pg.src_bits,
         kind=problem.reduce_kind,
         edge_op=problem.edge_op,
         identity=problem.identity,

@@ -17,12 +17,26 @@ becomes a direct offset into the phase's gathered label block:
 of the paper's "first log2(p) bits address the core" crossbar routing.
 
 On top of the (p, l, E_pad) bucket layout, ``partition_2d`` also precomputes
-the Pallas tile layout the fused engine hot path consumes: every (core, phase)
-bucket is binned into (R, T, Eb) row-block edge tiles (``prepare_tiles``) with
-degree-aware LPT row packing, then stacked into (p, l, R, T, Eb) arrays so one
-``pallas_call`` per phase runs all cores. ``tile_row_pos`` records the per-
-bucket row permutation the packing introduced (the engine un-permutes kernel
-output with one static gather).
+the COMPRESSED Pallas edge stream the fused engine hot path consumes (paper
+§III: "compressed graph representation"): every (core, phase) bucket is binned
+into (R, T, Eb) row-block edge tiles (``prepare_tiles``) with degree-aware LPT
+row packing, each edge slot's (src, dstb, valid) index triple is bit-packed
+into a single int32 word (``pack_edge_words``), and the words are stacked into
+one (p, l, R, T, Eb) array so a single ``pallas_call`` per phase runs all
+cores. Packed word format (decoded in-kernel with shifts/masks):
+
+  src_bits=16 (when p * sub_size <= 2^16 and vb <= 2^15 — the common case):
+      tile_word    = valid<<31 | dstb<<16 | src           4 index B/edge
+  src_bits=32 (fallback for larger gathered blocks):
+      tile_word    = src
+      tile_word_hi = valid<<31 | dstb                     8 index B/edge
+
+vs 9 B/edge for the uncompressed (int32, int32, bool) triple. ``tile_counts``
+holds the per-(core, phase, row-block) count of REAL edge tiles so the kernel
+skips all-padding tiles outright (variable-T early-out) instead of streaming
+them. ``tile_row_pos`` records the per-bucket row permutation degree-aware
+packing introduced (the engine un-permutes kernel output with one static
+gather).
 
 Everything here is host-side numpy; outputs are static-shape arrays.
 """
@@ -59,6 +73,7 @@ class PartitionConfig:
     tile_vb: Optional[int] = None  # row-block height; None = sub_size (R = l)
     tile_eb: int = 128  # edge-tile width (lane quantum on real HW)
     degree_aware_tiles: bool = True  # LPT row packing (see prepare_tiles)
+    pack_src_bits: Optional[int] = None  # force 16/32-bit regime; None = auto
 
 
 @dataclasses.dataclass(frozen=True)
@@ -83,14 +98,16 @@ class PartitionedGraph:
     perm: Optional[np.ndarray]  # old -> new vertex id (stride mapping), or None
     inv_perm: Optional[np.ndarray]
     bucket_sizes: np.ndarray  # (p, l) int64 — real edges per sub-partition
-    # stacked fused-kernel tile layout (one TileLayout per bucket, uniform
-    # (R, T) so all p cores of a phase launch as one pallas_call grid):
-    tile_src: Optional[np.ndarray] = None  # (p, l, R, T, Eb) int32
-    tile_dstb: Optional[np.ndarray] = None  # (p, l, R, T, Eb) int32 in [0, vb)
-    tile_valid: Optional[np.ndarray] = None  # (p, l, R, T, Eb) bool
+    # stacked fused-kernel COMPRESSED edge stream (one TileLayout per bucket,
+    # bit-packed, uniform (R, T) so all p cores of a phase launch as one
+    # pallas_call grid — see module docstring for the word format):
+    tile_word: Optional[np.ndarray] = None  # (p, l, R, T, Eb) int32 packed
+    tile_word_hi: Optional[np.ndarray] = None  # (p, l, R, T, Eb) int32 (32-bit regime)
+    tile_counts: Optional[np.ndarray] = None  # (p, l, R) int32 real tiles per block
     tile_weights: Optional[np.ndarray] = None  # (p, l, R, T, Eb) f32 or None
     tile_row_pos: Optional[np.ndarray] = None  # (p, l, Vl) int32 or None
     tile_vb: int = 0  # row-block height (0 = tiles not built)
+    src_bits: int = 0  # packed-word regime: 16 or 32 (0 = tiles not built)
 
     @property
     def vertices_per_core(self) -> int:
@@ -125,11 +142,31 @@ class PartitionedGraph:
     def tile_padding_ratio(self) -> float:
         """Padded-slot fraction of the fused-kernel tile layout — what
         degree-aware row packing minimizes (hub rows no longer set T for
-        every row block)."""
-        if self.tile_valid is None:
+        every row block). Every real edge occupies exactly one tile slot, so
+        this no longer needs a materialized valid array."""
+        if self.tile_word is None:
             return 0.0
-        total = self.tile_valid.size
-        return 1.0 - float(self.tile_valid.sum()) / max(total, 1)
+        return 1.0 - float(self.bucket_sizes.sum()) / max(self.tile_word.size, 1)
+
+    @property
+    def stream_bytes_per_edge(self) -> float:
+        """Index-stream bytes per edge slot of the compressed layout: 4 in the
+        16-bit packed regime (8 in the 32-bit fallback) vs 9 uncompressed
+        (int32 src + int32 dstb + bool valid). Payload weights, when present,
+        add 4 more on both layouts and are excluded here."""
+        if self.tile_word is None:
+            return 0.0
+        return 4.0 * (1 if self.tile_word_hi is None else 2)
+
+    @property
+    def skipped_tile_fraction(self) -> float:
+        """Fraction of (core, phase, row-block) edge tiles the kernel's
+        scalar-prefetched tile-count early-out never streams or decodes."""
+        if self.tile_counts is None or self.tile_word is None:
+            return 0.0
+        t_max = self.tile_word.shape[3]
+        total = self.tile_counts.size * t_max
+        return 1.0 - float(self.tile_counts.sum()) / max(total, 1)
 
 
 def stride_permutation(num_vertices: int, stride: int = 100) -> np.ndarray:
@@ -245,14 +282,25 @@ def partition_2d(g: COOGraph, cfg: PartitionConfig) -> PartitionedGraph:
 
 
 def _build_tile_layouts(p, l, vpc, src_gidx, dst_lidx, valid, weights, cfg, sub_size):
-    """Bin every (core, phase) bucket into (R, T, Eb) row-block tiles and stack
-    to (p, l, R, T, Eb) with a uniform T (max over buckets, padded valid=False)
-    so the engine launches all cores of a phase in one pallas_call."""
-    from repro.kernels.csr_gather_reduce.ops import prepare_tiles
+    """Bin every (core, phase) bucket into (R, T, Eb) row-block tiles, bit-pack
+    each slot's index triple into the compressed word stream, and stack to
+    (p, l, R, T, Eb) with a uniform T (max over buckets; padded tiles are
+    recorded in ``tile_counts`` so the kernel skips them) so the engine
+    launches all cores of a phase in one pallas_call."""
+    from repro.kernels.csr_gather_reduce.ops import (
+        choose_src_bits,
+        prepare_tiles,
+        stack_packed_tiles,
+    )
 
     vb = cfg.tile_vb if cfg.tile_vb is not None else sub_size
     assert vpc % vb == 0, (vpc, vb)
     eb = cfg.tile_eb
+    src_bits = (
+        cfg.pack_src_bits
+        if cfg.pack_src_bits is not None
+        else choose_src_bits(p * sub_size, vb)
+    )
     layouts = [
         [
             prepare_tiles(
@@ -265,38 +313,35 @@ def _build_tile_layouts(p, l, vpc, src_gidx, dst_lidx, valid, weights, cfg, sub_
         ]
         for i in range(p)
     ]
-    r_blocks = vpc // vb
-    t_max = max(t.src.shape[1] for row in layouts for t in row)
-    tile_src = np.zeros((p, l, r_blocks, t_max, eb), dtype=np.int32)
-    tile_dstb = np.zeros((p, l, r_blocks, t_max, eb), dtype=np.int32)
-    tile_valid = np.zeros((p, l, r_blocks, t_max, eb), dtype=bool)
+    flat = [layouts[i][m] for i in range(p) for m in range(l)]
+    word, word_hi, counts, wts = stack_packed_tiles(flat, src_bits=src_bits)
+    r_blocks, t_max = word.shape[1], word.shape[2]
+    tile_word = word.reshape(p, l, r_blocks, t_max, eb)
+    tile_word_hi = (
+        word_hi.reshape(p, l, r_blocks, t_max, eb) if word_hi is not None else None
+    )
+    tile_counts = counts.reshape(p, l, r_blocks)
     tile_weights = (
-        np.zeros((p, l, r_blocks, t_max, eb), dtype=np.float32)
-        if weights is not None
-        else None
+        wts.reshape(p, l, r_blocks, t_max, eb) if wts is not None else None
     )
     any_packed = any(t.row_pos is not None for row in layouts for t in row)
     tile_row_pos = (
         np.tile(np.arange(vpc, dtype=np.int32), (p, l, 1)) if any_packed else None
     )
-    for i in range(p):
-        for m in range(l):
-            t = layouts[i][m]
-            tt = t.src.shape[1]
-            tile_src[i, m, :, :tt] = t.src
-            tile_dstb[i, m, :, :tt] = t.dstb
-            tile_valid[i, m, :, :tt] = t.valid
-            if tile_weights is not None and t.weights is not None:
-                tile_weights[i, m, :, :tt] = t.weights
-            if tile_row_pos is not None and t.row_pos is not None:
-                tile_row_pos[i, m] = t.row_pos
+    if tile_row_pos is not None:
+        for i in range(p):
+            for m in range(l):
+                t = layouts[i][m]
+                if t.row_pos is not None:
+                    tile_row_pos[i, m] = t.row_pos
     return dict(
-        tile_src=tile_src,
-        tile_dstb=tile_dstb,
-        tile_valid=tile_valid,
+        tile_word=tile_word,
+        tile_word_hi=tile_word_hi,
+        tile_counts=tile_counts,
         tile_weights=tile_weights,
         tile_row_pos=tile_row_pos,
         tile_vb=vb,
+        src_bits=src_bits,
     )
 
 

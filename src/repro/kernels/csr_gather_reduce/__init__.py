@@ -5,7 +5,10 @@ from repro.kernels.csr_gather_reduce.kernel import (  # noqa: F401
 )
 from repro.kernels.csr_gather_reduce.ops import (  # noqa: F401
     TileLayout,
+    choose_src_bits,
     gather_reduce,
+    pack_edge_words,
     prepare_tiles,
     segment_reduce_rows,
+    stack_packed_tiles,
 )

@@ -18,19 +18,45 @@ Edges are pre-binned by destination row block (host-side, partition time), so
 the output BlockSpec is a pure function of the grid — the same trick as the
 paper's two-dimensional partitioning, one level down.
 
+Compressed edge stream (paper §III: "compressed graph representation")
+----------------------------------------------------------------------
+The engine hot path (``gather_reduce_cores_pallas``) does NOT stream the
+uncompressed (int32 src, int32 dstb, bool valid) triple per edge slot — that
+is 9 index bytes/edge, most of which is zero-padding at the measured 66-81%
+tile padding ratio. Instead each slot is ONE bit-packed int32 word, decoded
+with shifts/masks in registers inside the kernel:
+
+  16-bit regime (``src_bits=16``, when p * sub_size <= 2^16 and vb <= 2^15):
+      word = valid<<31 | dstb<<16 | src                       4 B/edge
+      unpack: src = word & 0xFFFF; dstb = (word >> 16) & 0x7FFF;
+              valid = word < 0   (bit 31 is the int32 sign bit)
+  32-bit fallback (``src_bits=32``):
+      word = src;  word_hi = valid<<31 | dstb                 8 B/edge
+
+On top of the packed words, a scalar-prefetched per-(core, row-block) tile
+count (``counts``, SMEM-resident before the kernel body runs) lets the kernel
+skip all-padding tiles entirely via ``@pl.when(t < counts[c, r])``: skipped
+tiles are never gathered, reduced, or even decoded — only the one word stream
+for the real tiles ever crosses HBM. These are the two compression levers the
+paper's bandwidth claim rests on: fewer bytes per edge, and no bytes at all
+for padding.
+
 Blocks: Eb multiple of 128 (lanes), Vb multiple of 8 (sublanes) on real TPU;
 tests run interpret=True on CPU with relaxed sizes.
 
 Two entry points share the tile body:
 
-  * ``gather_reduce_pallas``  — one (core, phase) bucket, grid (R, T).
+  * ``gather_reduce_pallas``  — one (core, phase) bucket, grid (R, T),
+    UNCOMPRESSED (src/dstb/valid arrays). Kept as the uncompressed-Pallas
+    correctness reference and for model code whose per-edge values are traced.
   * ``gather_reduce_cores_pallas`` — the engine's fused hot path: a leading
     core grid dimension runs ALL ``p`` graph cores of one phase in a single
-    ``pallas_call`` over grid (p, R, T). The phase's gathered crossbar block
-    (shape (G,) = (p * sub_size,), shared by every core exactly like the
-    paper's broadcast crossbar) stays resident in VMEM for the whole launch;
-    per-edge state never exists outside the (1, 1, 1, Eb) tile registers, so
-    no (p, E_pad) contributions array is ever materialized in HBM.
+    ``pallas_call`` over grid (p, R, T), reading the compressed word stream.
+    The phase's gathered crossbar block (shape (G,) = (p * sub_size,), shared
+    by every core exactly like the paper's broadcast crossbar) stays resident
+    in VMEM for the whole launch; per-edge state never exists outside the
+    (1, 1, 1, Eb) tile registers, so neither a (p, E_pad) contributions array
+    nor an unpacked per-edge index array is ever materialized in HBM.
 """
 from __future__ import annotations
 
@@ -39,6 +65,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 __all__ = ["gather_reduce_pallas", "gather_reduce_cores_pallas"]
 
@@ -47,8 +74,9 @@ def _accumulate(kind: str, edge_op: str, payload, src, dstb, val, w, acc, identi
     """Shared tile body: gather -> map -> segment-reduce -> merge into acc."""
     vals = jnp.take(payload, src, axis=0)  # (Eb,) scratch-pad reads
     ident = jnp.asarray(identity, vals.dtype)
-    if edge_op == "add":  # saturating min-plus map (SSSP)
-        vals = jnp.where(vals >= ident, ident, vals + w.astype(vals.dtype))
+    if edge_op == "add":  # saturating min-plus map (SSSP); w=None => unit weights
+        step = w.astype(vals.dtype) if w is not None else jnp.asarray(1.0, vals.dtype)
+        vals = jnp.where(vals >= ident, ident, vals + step)
     vals = jnp.where(val, vals, ident)
     rows = jax.lax.broadcasted_iota(jnp.int32, (vb, vals.shape[0]), 0)
     onehot = rows == dstb[None, :]
@@ -57,6 +85,22 @@ def _accumulate(kind: str, edge_op: str, payload, src, dstb, val, w, acc, identi
         return acc + contrib
     masked = jnp.where(onehot, vals[None, :], ident)
     return jnp.minimum(acc, masked.min(axis=1))
+
+
+def _unpack_word(word, word_hi, src_bits: int):
+    """Decode one packed edge-word tile (registers only; shifts + masks).
+
+    Arithmetic >> on int32 sign-extends, so the 0x7FFF mask after shifting by
+    16 both isolates the dstb field and drops the smeared valid bit."""
+    if src_bits == 16:
+        src = word & 0xFFFF
+        dstb = (word >> 16) & 0x7FFF
+        valid = word < 0
+    else:
+        src = word
+        dstb = word_hi & 0x7FFFFFFF
+        valid = word_hi < 0
+    return src, dstb, valid
 
 
 def _kernel(src_ref, dst_ref, val_ref, w_ref, payload_ref, out_ref, *, kind, edge_op, identity, vb):
@@ -136,79 +180,102 @@ def gather_reduce_pallas(
     )(*args)
 
 
-def _cores_kernel(src_ref, dst_ref, val_ref, w_ref, payload_ref, out_ref, *, kind, edge_op, identity, vb):
-    t = pl.program_id(2)
-
-    @pl.when(t == 0)
-    def _init():
-        out_ref[...] = jnp.full_like(out_ref[...], identity)
-
-    src = src_ref[0, 0, 0, :]
-    dstb = dst_ref[0, 0, 0, :].astype(jnp.int32)
-    val = val_ref[0, 0, 0, :]
-    w = w_ref[0, 0, 0, :] if w_ref is not None else None
-    payload = payload_ref[...]
-    acc = out_ref[0, :]
-    out_ref[0, :] = _accumulate(
-        kind, edge_op, payload, src, dstb, val, w, acc, identity, vb
-    )
-
-
 @functools.partial(
     jax.jit,
-    static_argnames=("num_rows", "vb", "kind", "edge_op", "identity", "interpret"),
+    static_argnames=(
+        "num_rows", "vb", "src_bits", "kind", "edge_op", "identity", "interpret"
+    ),
 )
 def gather_reduce_cores_pallas(
     payload: jnp.ndarray,  # (G,) phase-gathered crossbar block, shared by cores
-    src: jnp.ndarray,  # (p, R, T, Eb) int32 into payload
-    dstb: jnp.ndarray,  # (p, R, T, Eb) int32 row index WITHIN block [0, Vb)
-    valid: jnp.ndarray,  # (p, R, T, Eb) bool
+    word: jnp.ndarray,  # (p, R, T, Eb) int32 packed edge words
+    counts: jnp.ndarray,  # (p, R) int32 real edge tiles per (core, row block)
+    word_hi: jnp.ndarray | None = None,  # (p, R, T, Eb) int32, src_bits=32 only
     weights: jnp.ndarray | None = None,  # (p, R, T, Eb) f32 (edge_op == 'add')
     *,
     num_rows: int,  # rows per core (= vertices_per_core)
     vb: int,
+    src_bits: int = 16,
     kind: str = "min",
     edge_op: str = "none",
     identity: float = 0.0,
     interpret: bool = True,
 ) -> jnp.ndarray:
-    """All-cores accumulator: grid (p, R, T) -> (p, num_rows) reductions.
+    """All-cores accumulator over the COMPRESSED edge stream: grid (p, R, T)
+    -> (p, num_rows) reductions.
+
+    Each edge slot arrives as one bit-packed word (two in the 32-bit fallback;
+    see module docstring) and is decoded in registers. ``counts`` is scalar-
+    prefetched (SMEM before the body runs), and tiles with ``t >= counts[c, r]``
+    — the 66-81% of slots that are pure padding on measured partitions — are
+    skipped without gathering, reducing, or decoding anything.
 
     Core ``c``'s output rows [r*vb, (r+1)*vb) are revisited across the T edge
     tiles of row block r (buffered writer) and written to HBM once; VMEM holds
-    one (Eb,) edge tile per operand plus the (G,) scratch pad at any time.
+    one (Eb,) word tile per operand plus the (G,) scratch pad at any time.
     """
-    p, r_blocks, t_tiles, eb = src.shape
-    assert r_blocks * vb == num_rows, (src.shape, vb, num_rows)
+    p, r_blocks, t_tiles, eb = word.shape
+    assert r_blocks * vb == num_rows, (word.shape, vb, num_rows)
+    assert counts.shape == (p, r_blocks), (counts.shape, (p, r_blocks))
+    assert (word_hi is not None) == (src_bits == 32), (src_bits, word_hi is None)
     g = payload.shape[0]
+    has_hi = word_hi is not None
+    has_w = weights is not None
 
-    edge_block = pl.BlockSpec((1, 1, 1, eb), lambda c, r, t: (c, r, t, 0))
-    in_specs = [
-        edge_block,
-        edge_block,
-        edge_block,
-        edge_block if weights is not None else None,
-        pl.BlockSpec((g,), lambda c, r, t: (0,)),  # whole scratch pad resident
-    ]
-    if weights is None:
-        def kern(src_ref, dst_ref, val_ref, payload_ref, out_ref):
-            _cores_kernel(
-                src_ref, dst_ref, val_ref, None, payload_ref, out_ref,
-                kind=kind, edge_op=edge_op, identity=identity, vb=vb,
+    def kern(cnt_ref, *refs):
+        refs = list(refs)
+        word_ref = refs.pop(0)
+        hi_ref = refs.pop(0) if has_hi else None
+        w_ref = refs.pop(0) if has_w else None
+        payload_ref, out_ref = refs
+        c, r, t = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+
+        @pl.when(t == 0)
+        def _init():
+            out_ref[...] = jnp.full_like(out_ref[...], identity)
+
+        @pl.when(t < cnt_ref[c, r])  # variable-T early-out: skip padding tiles
+        def _work():
+            wd = word_ref[0, 0, 0, :]
+            hi = hi_ref[0, 0, 0, :] if hi_ref is not None else None
+            src, dstb, val = _unpack_word(wd, hi, src_bits)
+            w = w_ref[0, 0, 0, :] if w_ref is not None else None
+            acc = out_ref[0, :]
+            out_ref[0, :] = _accumulate(
+                kind, edge_op, payload_ref[...], src, dstb, val, w, acc,
+                identity, vb,
             )
-        in_specs = [s for s in in_specs if s is not None]
-        args = (src, dstb, valid, payload)
-    else:
-        kern = functools.partial(
-            _cores_kernel, kind=kind, edge_op=edge_op, identity=identity, vb=vb
-        )
-        args = (src, dstb, valid, weights, payload)
 
-    return pl.pallas_call(
-        kern,
+    # Block-sparse fetch elision: @pl.when only predicates COMPUTE — the
+    # pipeline still DMAs whatever block the index map names. Clamping the
+    # tile index at the last real tile makes every skipped grid step revisit
+    # the previous block, which the pipeline recognizes and does not re-fetch,
+    # so padding tiles cost no HBM traffic on compiled TPU either.
+    def edge_idx(c, r, t, cnt):
+        return (c, r, jnp.minimum(t, jnp.maximum(cnt[c, r] - 1, 0)), 0)
+
+    edge_block = pl.BlockSpec((1, 1, 1, eb), edge_idx)
+    in_specs = (
+        [edge_block]
+        + ([edge_block] if has_hi else [])
+        + ([edge_block] if has_w else [])
+        + [pl.BlockSpec((g,), lambda c, r, t, cnt: (0,))]  # scratch pad resident
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
         grid=(p, r_blocks, t_tiles),
         in_specs=in_specs,
-        out_specs=pl.BlockSpec((1, vb), lambda c, r, t: (c, r)),
+        out_specs=pl.BlockSpec((1, vb), lambda c, r, t, cnt: (c, r)),
+    )
+    args = (
+        (word,)
+        + ((word_hi,) if has_hi else ())
+        + ((weights,) if has_w else ())
+        + (payload,)
+    )
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((p, num_rows), payload.dtype),
         interpret=interpret,
         compiler_params=dict(
@@ -216,4 +283,4 @@ def gather_reduce_cores_pallas(
         )
         if not interpret
         else None,
-    )(*args)
+    )(counts.astype(jnp.int32), *args)

@@ -1,9 +1,12 @@
 """Host-side tile preparation + jitted wrapper for the accumulator kernel.
 
 ``prepare_tiles`` bins a (dst-sorted) edge bucket into (R, T, Eb) row-block
-tiles at partition time (numpy). ``gather_reduce`` runs the Pallas kernel;
-``segment_reduce_rows`` is the reduce-only variant used when contributions are
-already materialized (engine fallback path).
+tiles at partition time (numpy). ``pack_edge_words`` bit-packs the
+(src, dstb, valid) index triple of each edge slot into the compressed word
+stream the fused engine path reads (see ``kernel.py`` for the word format and
+``choose_src_bits`` for the 16/32-bit regime rule). ``gather_reduce`` runs the
+Pallas kernel; ``segment_reduce_rows`` is the reduce-only variant used when
+contributions are already materialized (engine fallback path).
 """
 from __future__ import annotations
 
@@ -16,7 +19,102 @@ import numpy as np
 from repro.kernels.csr_gather_reduce.kernel import gather_reduce_pallas
 from repro.kernels.csr_gather_reduce.ref import gather_reduce_reference
 
-__all__ = ["TileLayout", "prepare_tiles", "gather_reduce", "segment_reduce_rows"]
+__all__ = [
+    "TileLayout",
+    "prepare_tiles",
+    "choose_src_bits",
+    "pack_edge_words",
+    "stack_packed_tiles",
+    "gather_reduce",
+    "segment_reduce_rows",
+]
+
+# packed-word field bounds (see kernel.py "Compressed edge stream" docstring)
+SRC16_LIMIT = 1 << 16  # gathered-block offsets that fit the 16-bit src field
+DSTB16_LIMIT = 1 << 15  # row-block offsets that fit next to a 16-bit src
+
+
+def choose_src_bits(gathered_size: int, vb: int) -> int:
+    """Packed-word regime rule: 16-bit src iff every gathered-block offset fits
+    16 bits AND the row-block offset fits the remaining 15 bits (bit 31 is the
+    valid flag). Otherwise fall back to a two-word (32-bit src) stream."""
+    return 16 if gathered_size <= SRC16_LIMIT and vb <= DSTB16_LIMIT else 32
+
+
+def pack_edge_words(
+    src: np.ndarray,  # (...,) int, gathered-block offsets in [0, G)
+    dstb: np.ndarray,  # (...,) int, row offsets WITHIN the row block [0, vb)
+    valid: np.ndarray,  # (...,) bool
+    *,
+    src_bits: int,
+) -> tuple[np.ndarray, np.ndarray | None]:
+    """Bit-pack edge-slot index triples into the compressed stream (numpy,
+    partition time). Returns ``(word, word_hi)`` int32 arrays of ``src.shape``;
+    ``word_hi`` is None in the 16-bit regime.
+
+      src_bits=16: word    = valid<<31 | dstb<<16 | src          (4 B/edge)
+      src_bits=32: word    = src                                  (8 B/edge)
+                   word_hi = valid<<31 | dstb
+
+    Padding slots (valid=False) pack to words with bit 31 clear, so the
+    in-kernel validity test is simply ``word < 0`` (resp. ``word_hi < 0``).
+    """
+    src64 = np.asarray(src, dtype=np.int64)
+    dstb64 = np.asarray(dstb, dtype=np.int64)
+    # 32-bit bounds are the int32-REPRESENTABLE ranges: the kernel reads the
+    # words back as int32, so src in [2^31, 2^32) would gather at a negative
+    # index and dstb's bit 31 is the valid flag.
+    src_limit = SRC16_LIMIT if src_bits == 16 else 1 << 31
+    dstb_limit = DSTB16_LIMIT if src_bits == 16 else 1 << 31
+    if src_bits not in (16, 32):
+        raise ValueError(f"src_bits must be 16 or 32, got {src_bits}")
+    if src64.size and not (0 <= int(src64.min()) and int(src64.max()) < src_limit):
+        raise ValueError(
+            f"src offsets [{int(src64.min())}, {int(src64.max())}] do not fit "
+            f"the {src_bits}-bit field"
+            + ("; use src_bits=32" if src_bits == 16 else "")
+        )
+    if dstb64.size and not (0 <= int(dstb64.min()) and int(dstb64.max()) < dstb_limit):
+        raise ValueError(
+            f"dstb offsets [{int(dstb64.min())}, {int(dstb64.max())}] do not fit "
+            f"the {15 if src_bits == 16 else 31}-bit field"
+            + ("; use src_bits=32" if src_bits == 16 else "")
+        )
+    src_u = src64.astype(np.uint32)
+    dstb_u = dstb64.astype(np.uint32)
+    vbit = np.asarray(valid, dtype=np.uint32) << 31
+    if src_bits == 16:
+        return (vbit | (dstb_u << 16) | src_u).view(np.int32), None
+    return src_u.view(np.int32), (vbit | dstb_u).view(np.int32)
+
+
+def stack_packed_tiles(
+    layouts: list[TileLayout], *, src_bits: int
+) -> tuple[np.ndarray, np.ndarray | None, np.ndarray, np.ndarray | None]:
+    """Pack each layout's (src, dstb, valid) triple and stack to one
+    uniform-T compressed stream: ``(word, word_hi, counts, weights)`` with
+    shapes (n, R, T_max, Eb) / (n, R). Layouts shorter than T_max are padded
+    with all-invalid words that ``counts`` tells the kernel to skip. The
+    single source of truth for the stream layout the engine, benchmarks, and
+    tests consume."""
+    n = len(layouts)
+    r_blocks, _, eb = layouts[0].src.shape
+    t_max = max(t.src.shape[1] for t in layouts)
+    word = np.zeros((n, r_blocks, t_max, eb), np.int32)
+    word_hi = np.zeros((n, r_blocks, t_max, eb), np.int32) if src_bits == 32 else None
+    counts = np.zeros((n, r_blocks), np.int32)
+    any_w = any(t.weights is not None for t in layouts)
+    weights = np.zeros((n, r_blocks, t_max, eb), np.float32) if any_w else None
+    for i, t in enumerate(layouts):
+        tt = t.src.shape[1]
+        w0, w1 = pack_edge_words(t.src, t.dstb, t.valid, src_bits=src_bits)
+        word[i, :, :tt] = w0
+        if word_hi is not None:
+            word_hi[i, :, :tt] = w1
+        counts[i] = t.tile_counts
+        if weights is not None and t.weights is not None:
+            weights[i, :, :tt] = t.weights
+    return word, word_hi, counts, weights
 
 
 @dataclasses.dataclass(frozen=True)
@@ -36,6 +134,9 @@ class TileLayout:
     # degree-aware packing: natural row i's reduction lives at kernel-output
     # position row_pos[i] (None = identity layout). Undo with out[row_pos].
     row_pos: np.ndarray | None = None  # (num_rows,) int32
+    # real edge tiles per row block: ceil(real_edges[r] / Eb). Tiles with
+    # t >= tile_counts[r] are all-padding; the fused kernel skips them.
+    tile_counts: np.ndarray | None = None  # (R,) int32
 
     @property
     def tile_padding_ratio(self) -> float:
@@ -119,6 +220,7 @@ def prepare_tiles(
     return TileLayout(
         src=src_t, dstb=dst_t, valid=val_t, weights=w_t, vb=vb,
         num_rows=num_rows, gather_idx=gat_t, row_pos=row_pos,
+        tile_counts=(-(-counts // eb)).astype(np.int32),
     )
 
 
@@ -136,6 +238,15 @@ def gather_reduce(
     if use_reference:
         r_blocks = tiles.src.shape[0]
         block_base = np.arange(r_blocks, dtype=np.int32)[:, None, None] * tiles.vb
+        ref_w = None
+        if edge_op == "add":
+            # the kernel treats missing weights as unit weights; the reference
+            # skips the add when weights is None, so make units explicit
+            ref_w = (
+                jnp.asarray(tiles.weights).reshape(-1)
+                if tiles.weights is not None
+                else jnp.ones(tiles.src.size, jnp.float32)
+            )
         out = gather_reduce_reference(
             payload,
             jnp.asarray(tiles.src).reshape(-1),
@@ -144,9 +255,7 @@ def gather_reduce(
             tiles.num_rows,
             kind=kind,
             identity=identity,
-            weights=jnp.asarray(tiles.weights).reshape(-1)
-            if tiles.weights is not None and edge_op == "add"
-            else None,
+            weights=ref_w,
         )
     else:
         out = gather_reduce_pallas(

@@ -9,7 +9,10 @@ segment-sums the flat edge list, so float summation order differs by design.
 
 Also proves the bandwidth claim structurally: the jaxpr of a fused iteration
 contains NO (p, E_pad) intermediate (the materialize-then-reduce array the
-XLA path builds), while the oracle's jaxpr does.
+XLA path builds) and no decompressed full-size edge-index arrays — the only
+full-size per-edge intermediate is the bit-packed word stream — while the
+oracle's jaxpr keeps the (p, E_pad) array. See test_compressed_stream.py for
+the word-format and three-way kernel equivalence suite.
 """
 import numpy as np
 import pytest
@@ -73,6 +76,8 @@ def test_fused_matches_xla_with_stride_and_packing_off(stride, rng):
 
 
 def _iteration_avals(problem, g, pg, backend):
+    """(shape, dtype-name) of every intermediate in one traced iteration,
+    including sub-jaxprs (fori_loop bodies, pallas_call kernels)."""
     labels = prepare_labels(problem, g, pg)
     opts = EngineOptions(backend=backend)
     iteration = _make_iteration(problem, pg, opts)
@@ -84,7 +89,9 @@ def _iteration_avals(problem, g, pg, backend):
         for eqn in jp.eqns:
             for v in eqn.outvars:
                 if hasattr(v, "aval") and hasattr(v.aval, "shape"):
-                    avals.append(tuple(v.aval.shape))
+                    avals.append(
+                        (tuple(v.aval.shape), str(getattr(v.aval, "dtype", "")))
+                    )
             for sub in jax.core.jaxprs_in_params(eqn.params):
                 walk(sub.jaxpr if hasattr(sub, "jaxpr") else sub)
 
@@ -94,13 +101,28 @@ def _iteration_avals(problem, g, pg, backend):
 
 def test_fused_path_materializes_no_contributions_array():
     """Bandwidth property, checked structurally: a fused iteration's jaxpr has
-    no (p, E_pad) intermediate, while the XLA oracle's does (positive
-    control, so the check cannot rot into vacuity)."""
+    no (p, E_pad) intermediate (the materialize-then-reduce array the XLA path
+    builds) and no decompressed full-size edge-index array — the only
+    (p, R, T, Eb) int32 intermediate is the packed word stream itself, and no
+    (p, R, T, Eb) bool valid mask exists at all. The oracle's jaxpr keeps the
+    (p, E_pad) array (positive control, so the check cannot rot into
+    vacuity)."""
     g = G.symmetrize(G.rmat(9, 8, seed=5))
     pg = partition_2d(g, PartitionConfig(p=2, l=2, lane=4))
     contrib_shape = (pg.p, pg.edge_pad)
-    assert contrib_shape not in _iteration_avals(bfs(0), g, pg, "pallas")
-    assert contrib_shape in _iteration_avals(bfs(0), g, pg, "xla")
+    fused = _iteration_avals(bfs(0), g, pg, "pallas")
+    oracle = _iteration_avals(bfs(0), g, pg, "xla")
+    assert contrib_shape not in {s for s, _ in fused}
+    assert contrib_shape in {s for s, _ in oracle}
+
+    # compressed-stream property: exactly ONE full-size (p, R, T, Eb) int32
+    # intermediate (the phase-sliced packed word) — an unpacked src/dstb pair
+    # would add more — and no full-size bool valid array anywhere.
+    tile_shape = (pg.p,) + pg.tile_word.shape[2:]
+    int32_tiles = [d for s, d in fused if s == tile_shape and d == "int32"]
+    bool_tiles = [d for s, d in fused if s == tile_shape and d == "bool"]
+    assert len(int32_tiles) == 1, int32_tiles
+    assert not bool_tiles
 
 
 def test_fused_kernel_runs_all_cores_in_one_launch():
@@ -108,7 +130,8 @@ def test_fused_kernel_runs_all_cores_in_one_launch():
     cores: the stacked tile arrays carry the core dimension."""
     g = G.symmetrize(G.rmat(8, 6, seed=6))
     pg = partition_2d(g, PartitionConfig(p=4, l=2, lane=4))
-    assert pg.tile_src.shape[:2] == (4, 2)
+    assert pg.tile_word.shape[:2] == (4, 2)
+    assert pg.tile_counts.shape == pg.tile_word.shape[:3]
     assert pg.tile_vb > 0 and pg.vertices_per_core % pg.tile_vb == 0
 
 
@@ -119,7 +142,7 @@ def test_degree_aware_packing_reduces_tile_padding():
     cfg = dict(p=4, l=2, lane=4, tile_vb=32)
     packed = partition_2d(g, PartitionConfig(**cfg, degree_aware_tiles=True))
     plain = partition_2d(g, PartitionConfig(**cfg, degree_aware_tiles=False))
-    assert packed.tile_src.shape[3] < plain.tile_src.shape[3]  # T shrinks
+    assert packed.tile_word.shape[3] < plain.tile_word.shape[3]  # T shrinks
     assert packed.tile_padding_ratio < plain.tile_padding_ratio
 
 
