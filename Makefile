@@ -1,15 +1,19 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test bench-smoke bench check
+.PHONY: test bench-smoke bench-engine bench check
 
 # tier-1 verify (ROADMAP.md)
 test:
 	$(PYTHON) -m pytest -x -q
 
-# quick engine-path sanity: fused Pallas vs XLA timings -> BENCH_engine.json
+# tiny-graph engine-path sanity: metric keys + Pallas/XLA agreement (CI)
 bench-smoke:
-	$(PYTHON) -c "import benchmarks.bench_engine as b; b.main(lambda n, us, d='': print(f'{n},{us:.1f},{d}'))"
+	$(PYTHON) -m benchmarks.bench_engine --smoke
+
+# full engine comparison incl. skew suite -> BENCH_engine.json
+bench-engine:
+	$(PYTHON) -m benchmarks.bench_engine
 
 # full benchmark harness (all paper figures)
 bench:

@@ -1,26 +1,36 @@
 """Engine backend comparison: the fused Pallas gather-map-reduce path vs the
-XLA materialize-then-reduce oracle at matched shapes, on >= 2 graph scales.
+XLA materialize-then-reduce oracle at matched shapes, on >= 2 graph scales,
+plus skew-heavy graphs where hub-row splitting actually bites.
 
 Emits CSV rows through the harness AND writes BENCH_engine.json at the repo
 root so the perf trajectory is recorded across PRs. On this CPU container the
 Pallas numbers are interpret-mode (correctness-grade, expected slower); the
-structural win the JSON also records is the traffic model: bytes the XLA path
-materializes for the (p, E_pad) contributions array that the fused path never
-writes, the compressed stream's index bytes per edge (packed word vs the
-9-byte uncompressed triple) and skipped-tile fraction (padding tiles the
-kernel's scalar-prefetched early-out never streams), plus tile padding
-with/without degree-aware packing.
+structural wins the JSON also records are the traffic model: bytes the XLA
+path materializes for the (p, E_pad) contributions array that the fused path
+never writes, the compressed stream's index bytes per edge (packed word vs
+the 9-byte uncompressed triple), the skipped-tile fraction (padding tiles the
+kernel's scalar-prefetched early-out never streams), and — on the skew suite —
+the two-level-reduce effect: ``t_max`` with hub-row splitting vs the unsplit
+layout's ``t_max`` (``t_max_reduction``, the stacked-stream shrink the single
+fattest row block used to dictate).
+
+``python -m benchmarks.bench_engine --smoke`` runs a tiny-graph CI variant:
+asserts the metric keys and Pallas/XLA agreement (no timing thresholds, no
+JSON write) so the perf path is exercised on every CI run.
 """
 from __future__ import annotations
 
 import json
 import pathlib
 
+import numpy as np
+
 import repro.core.graph as G
 from benchmarks.common import mteps, time_call
 from repro.core.engine import EngineOptions, run
 from repro.core.partition import PartitionConfig, partition_2d
 from repro.core.problems import bfs, pagerank
+from repro.data.synthetic import skewed_graph
 
 JSON_PATH = pathlib.Path(__file__).resolve().parent.parent / "BENCH_engine.json"
 
@@ -29,9 +39,33 @@ SCALES = {
     "rmat11": (11, 8, 3),
 }
 
+# skew-heavy graphs (ISSUE 3): one kernel row dwarfs the rest, so the unsplit
+# layout's T_max is set by the fattest row block. tile_vb is small relative
+# to vpc so the LPT packer has row blocks to spread virtual rows across.
+SKEW = {
+    "star-hub": dict(n=2048, kind="star", hub_in_degree=6000, avg_degree=2, seed=7),
+    "powerlaw": dict(n=2048, kind="powerlaw", hub_in_degree=4000, zipf_a=1.5, seed=8),
+}
+SKEW_CFG = dict(p=4, l=2, lane=8, tile_vb=64)
 
-def main(emit):
-    records = []
+# min problems must agree bit-exactly; sum (PR) reassociates across the
+# virtual-row chunking, so tight tolerance (same contract as the test suite).
+_PR_RTOL, _PR_ATOL = 2e-5, 1e-8
+
+# metric keys every skew record must carry (asserted by --smoke / CI)
+SKEW_METRIC_KEYS = (
+    "t_max", "t_max_unsplit", "t_max_reduction", "split_row_fraction",
+    "skipped_tile_fraction", "skipped_tile_fraction_unsplit", "agreement",
+)
+
+
+def _labels_agree(prob, a, b) -> bool:
+    if prob.reduce_kind == "min":
+        return bool(np.array_equal(a, b))
+    return bool(np.allclose(a, b, rtol=_PR_RTOL, atol=_PR_ATOL))
+
+
+def _bench_scales(emit, records):
     for sname, (s, d, root) in SCALES.items():
         g = G.symmetrize(G.rmat(s, d, seed=1))
         pg = partition_2d(g, PartitionConfig(p=4, l=4, lane=8, stride=100))
@@ -48,7 +82,10 @@ def main(emit):
                    "tile_padding_ratio": pgg.tile_padding_ratio,
                    "src_bits": pgg.src_bits,
                    "stream_bytes_per_edge": pgg.stream_bytes_per_edge,
-                   "skipped_tile_fraction": pgg.skipped_tile_fraction}
+                   "skipped_tile_fraction": pgg.skipped_tile_fraction,
+                   "t_max": pgg.tile_word.shape[3],
+                   "t_max_reduction": pgg.t_max_reduction,
+                   "split_row_fraction": pgg.split_row_fraction}
             for backend in ("xla", "pallas"):
                 opts = EngineOptions(backend=backend)
                 res = run(prob, gg, pgg, opts)
@@ -66,5 +103,104 @@ def main(emit):
             itemsize = 4
             row["xla_contrib_bytes_per_phase"] = pgg.p * pgg.edge_pad * itemsize
             records.append(row)
+
+
+def skew_record(gname, gspec, cfg, prob_pairs, time_fn=None):
+    """One skew-suite record: split vs unsplit layouts + backend agreement.
+    ``time_fn=None`` skips timing (smoke mode)."""
+    g = skewed_graph(**gspec)
+    pg_split = partition_2d(g, PartitionConfig(**cfg))  # splitting on (default)
+    pg_none = partition_2d(g, PartitionConfig(**cfg, split_threshold=None))
+    row = {
+        "graph": gname, "V": g.num_vertices, "E": g.num_edges,
+        "p": pg_split.p, "l": pg_split.l,
+        "tile_shape": list(pg_split.tile_word.shape),
+        "t_max": int(pg_split.tile_word.shape[3]),
+        "t_max_unsplit": int(pg_none.tile_word.shape[3]),
+        "t_max_reduction": pg_split.t_max_reduction,
+        "split_row_fraction": pg_split.split_row_fraction,
+        "src_bits": pg_split.src_bits,
+        "stream_bytes_per_edge": pg_split.stream_bytes_per_edge,
+        "skipped_tile_fraction": pg_split.skipped_tile_fraction,
+        "skipped_tile_fraction_unsplit": pg_none.skipped_tile_fraction,
+        "agreement": {},
+    }
+    # the partitioner's own unsplit-T bookkeeping must match the real thing
+    assert pg_split.t_max_unsplit == row["t_max_unsplit"], (
+        pg_split.t_max_unsplit, row["t_max_unsplit"])
+    for pname, prob in prob_pairs:
+        res_x = run(prob, g, pg_none, EngineOptions(backend="xla"))
+        res_s = run(prob, g, pg_split, EngineOptions(backend="pallas"))
+        res_u = run(prob, g, pg_none, EngineOptions(backend="pallas"))
+        row["agreement"][pname] = (
+            _labels_agree(prob, res_s.labels["label"], res_x.labels["label"])
+            and _labels_agree(prob, res_u.labels["label"], res_x.labels["label"])
+        )
+        if time_fn is not None:
+            for tag, pgg in (("split", pg_split), ("unsplit", pg_none), ("xla", pg_none)):
+                opts = EngineOptions(backend="xla" if tag == "xla" else "pallas")
+                t = time_fn(lambda: run(prob, g, pgg, opts))
+                row[f"{pname}_{tag}_us"] = t * 1e6
+                row[f"{pname}_{tag}_mteps"] = mteps(g.num_edges, t)
+    return row
+
+
+def _bench_skew(emit, records):
+    for gname, gspec in SKEW.items():
+        row = skew_record(
+            gname, gspec, SKEW_CFG,
+            (("bfs", bfs(3)), ("pr", pagerank(tol=1e-4))),
+            time_fn=time_call,
+        )
+        records.append(row)
+        emit(
+            f"engine/{gname}/split",
+            row["bfs_split_us"],
+            f"t_max={row['t_max']}/{row['t_max_unsplit']} "
+            f"reduction={row['t_max_reduction']:.2f} "
+            f"agree={all(row['agreement'].values())}",
+        )
+
+
+def main(emit):
+    records = []
+    _bench_scales(emit, records)
+    _bench_skew(emit, records)
     JSON_PATH.write_text(json.dumps({"records": records}, indent=2) + "\n")
     emit("engine/json", 0.0, f"wrote {JSON_PATH.name} ({len(records)} records)")
+
+
+def smoke(emit):
+    """Tiny-graph CI pass: exercise the fused perf path end to end, assert
+    metric keys + Pallas/XLA agreement. No timing thresholds, no JSON write."""
+    spec = dict(n=256, kind="star", hub_in_degree=700, avg_degree=2, seed=7)
+    cfg = dict(p=2, l=2, lane=8, tile_vb=32, tile_eb=32)
+    row = skew_record(
+        "smoke-star", spec, cfg,
+        (("bfs", bfs(3)), ("pr", pagerank(tol=1e-4))),
+        time_fn=None,
+    )
+    for key in SKEW_METRIC_KEYS:
+        assert key in row, f"missing skew metric {key!r}"
+    assert row["split_row_fraction"] > 0.0, "smoke graph must trigger splitting"
+    assert row["t_max"] < row["t_max_unsplit"], row
+    assert all(row["agreement"].values()), row["agreement"]
+    emit(
+        "engine/smoke", 0.0,
+        f"t_max={row['t_max']}/{row['t_max_unsplit']} "
+        f"reduction={row['t_max_reduction']:.2f} agreement=ok",
+    )
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny-graph CI pass: asserts, no timings, no JSON")
+    args = ap.parse_args()
+
+    def _emit(name, us, detail=""):
+        print(f"{name},{us:.1f},{detail}")
+
+    (smoke if args.smoke else main)(_emit)

@@ -12,4 +12,6 @@ fi
 
 python -m pytest -x -q
 
-python -c "import benchmarks.bench_engine as b; b.main(lambda n, us, d='': print(f'{n},{us:.1f},{d}'))"
+# tiny-graph perf-path smoke: metric keys + Pallas/XLA agreement asserted
+# (no timing thresholds); full timings are `make bench-engine`.
+python -m benchmarks.bench_engine --smoke

@@ -35,7 +35,10 @@ Two step-2 backends, selected by ``EngineOptions.backend``:
     Consumes the partition-time (p, l, R, T, Eb) packed stream on
     ``PartitionedGraph``; runs in interpret mode on CPU
     (``kernel_interpret=True``, correctness-grade timings) and compiled on
-    real TPUs.
+    real TPUs. Hub rows split at partition time reduce as independent
+    virtual rows in-kernel (level 1); a gather-based second-level combine
+    (``combine_split_rows``, the problem's reduce op + identity over the
+    ``tile_split_map``) folds the partials into true rows before apply.
   * ``'xla'`` — the correctness oracle: materializes the (p, E_pad)
     contributions array via take/where and segment-reduces it. Bit-identical
     to the Pallas path for min problems; for sum problems (PageRank) results
@@ -124,6 +127,12 @@ def unpad_labels(
 
 
 def _segment_reduce(kind: str, contrib, dst, num_segments: int, identity):
+    # ``identity`` documents the caller's reduce identity; segment_min fills
+    # empty segments with the dtype max (float inf / 0xFFFFFFFF for uint32 ==
+    # INF_U32) and segment_sum with 0, which ARE the min/sum identities the
+    # problems use — the same pairing the two-level split combine
+    # (combine_split_rows) relies on. A kind whose identity is not the dtype
+    # extreme would need an explicit fill here.
     if kind == "min":
         return jax.ops.segment_min(
             contrib, dst, num_segments=num_segments, indices_are_sorted=True
@@ -160,6 +169,11 @@ def _edge_constants(problem: Problem, pg: PartitionedGraph, opts: EngineOptions)
             "row_pos": jnp.asarray(pg.tile_row_pos)
             if pg.tile_row_pos is not None
             else None,  # (p, l, Vl)
+            # hub-row splitting: virtual-row partials -> natural rows, merged
+            # with the problem's OWN reduce op + identity (level-2 reduce).
+            "split_map": jnp.asarray(pg.tile_split_map)
+            if pg.tile_split_map is not None
+            else None,  # (p, l, Vl, S_max), -1 pad
         }
     w = jnp.asarray(pg.weights) if pg.weights is not None else None
     return {
@@ -174,8 +188,11 @@ def _phase_reduce_pallas(problem, pg, consts, labels, m, opts):
     """Steps 1+2, fused: prefetch the crossbar block, then ONE pallas_call
     over grid (p, R, T) does unpack + gather + map UDF + segment reduce for
     all cores, reading the compressed word stream and skipping padding tiles.
-    No (p, E_pad) per-edge array is materialized."""
+    No (p, E_pad) per-edge array is materialized. With hub-row splitting the
+    kernel output is over VIRTUAL rows and a second-level combine folds the
+    partials into natural rows (still no per-edge materialization)."""
     from repro.kernels.csr_gather_reduce.kernel import gather_reduce_cores_pallas
+    from repro.kernels.csr_gather_reduce.ops import combine_split_rows
 
     payload = problem.src_transform(labels)  # (p, Vl) elementwise
     sub = jax.lax.dynamic_slice_in_dim(payload, m * pg.sub_size, pg.sub_size, axis=1)
@@ -199,15 +216,25 @@ def _phase_reduce_pallas(problem, pg, consts, labels, m, opts):
         counts,
         hi,
         w,
-        num_rows=pg.vertices_per_core,
+        num_rows=pg.packed_rows_per_core,
         vb=pg.tile_vb,
         src_bits=pg.src_bits,
         kind=problem.reduce_kind,
         edge_op=problem.edge_op,
         identity=problem.identity,
         interpret=opts.kernel_interpret,
-    )  # (p, Vl) in packed row space
-    if consts["row_pos"] is not None:  # undo degree-aware row packing
+    )  # (p, R*vb) level-1 reductions in packed (virtual-)row space
+    if consts["split_map"] is not None:
+        # level-2 reduce (hub-row splitting): fold each natural row's
+        # virtual-row partials with the problem's reduce op; -1 padding
+        # contributes the problem's identity, never a stray 0.
+        sm = jax.lax.dynamic_index_in_dim(
+            consts["split_map"], m, axis=1, keepdims=False
+        )  # (p, Vl, S)
+        reduced = combine_split_rows(
+            reduced, sm, kind=problem.reduce_kind, identity=problem.identity
+        )
+    elif consts["row_pos"] is not None:  # undo degree-aware row packing
         rp = jax.lax.dynamic_index_in_dim(consts["row_pos"], m, axis=1, keepdims=False)
         reduced = jnp.take_along_axis(reduced, rp, axis=1)
     return reduced

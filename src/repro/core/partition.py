@@ -43,7 +43,7 @@ Everything here is host-side numpy; outputs are static-shape arrays.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Optional, Union
 
 import numpy as np
 
@@ -74,6 +74,14 @@ class PartitionConfig:
     tile_eb: int = 128  # edge-tile width (lane quantum on real HW)
     degree_aware_tiles: bool = True  # LPT row packing (see prepare_tiles)
     pack_src_bits: Optional[int] = None  # force 16/32-bit regime; None = auto
+    # hub-row splitting (two-level reduce): the max edge count of one kernel
+    # row. 'auto' = per bucket max(tile_eb, ceil(E_bucket / R)) — no virtual
+    # row exceeds the mean row-block load, floored at one tile width. An int
+    # fixes the cap for every bucket. None disables splitting entirely (the
+    # pre-split layout is preserved byte-for-byte). Requires
+    # degree_aware_tiles: virtual rows only pay off when the LPT packer can
+    # spread them across row blocks.
+    split_threshold: Union[str, int, None] = "auto"  # 'auto' | int | None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -108,6 +116,14 @@ class PartitionedGraph:
     tile_row_pos: Optional[np.ndarray] = None  # (p, l, Vl) int32 or None
     tile_vb: int = 0  # row-block height (0 = tiles not built)
     src_bits: int = 0  # packed-word regime: 16 or 32 (0 = tiles not built)
+    # hub-row splitting (two-level reduce). When any bucket split a row,
+    # tile_row_pos is None and these take over; R may exceed Vl / vb:
+    # packed kernel-output position -> natural row (-1 = spare, identity):
+    tile_row_orig: Optional[np.ndarray] = None  # (p, l, R * vb) int32
+    # gather form of the same map, what the engine's level-2 combine reads:
+    tile_split_map: Optional[np.ndarray] = None  # (p, l, Vl, S_max) int32, -1 pad
+    split_rows: int = 0  # natural (bucket, row) pairs split into > 1 virtual rows
+    t_max_unsplit: int = 0  # T the stacked stream would need without splitting
 
     @property
     def vertices_per_core(self) -> int:
@@ -167,6 +183,31 @@ class PartitionedGraph:
         t_max = self.tile_word.shape[3]
         total = self.tile_counts.size * t_max
         return 1.0 - float(self.tile_counts.sum()) / max(total, 1)
+
+    @property
+    def packed_rows_per_core(self) -> int:
+        """Kernel-output rows per core: R * vb. Equals vertices_per_core
+        unless hub-row splitting grew R to make room for virtual rows."""
+        if self.tile_word is None:
+            return self.vertices_per_core
+        return int(self.tile_word.shape[2]) * self.tile_vb
+
+    @property
+    def split_row_fraction(self) -> float:
+        """Fraction of natural (core, phase, row) slots hub-row splitting
+        broke into > 1 virtual rows (0.0 when splitting is off or no row
+        crossed the threshold)."""
+        total = self.p * self.l * self.vertices_per_core
+        return self.split_rows / max(total, 1)
+
+    @property
+    def t_max_reduction(self) -> float:
+        """Stacked-stream T_max as a fraction of what the UNSPLIT layout
+        would need (the single fattest row block): 1.0 = splitting off or
+        no effect; the acceptance target on star-like graphs is <= 0.5."""
+        if self.tile_word is None or self.t_max_unsplit <= 0:
+            return 1.0
+        return float(self.tile_word.shape[3]) / float(self.t_max_unsplit)
 
 
 def stride_permutation(num_vertices: int, stride: int = 100) -> np.ndarray:
@@ -281,15 +322,31 @@ def partition_2d(g: COOGraph, cfg: PartitionConfig) -> PartitionedGraph:
     )
 
 
+def _bucket_split_threshold(cfg: PartitionConfig, bucket_edges: int, r_blocks: int):
+    """Resolve cfg.split_threshold for one bucket (None = splitting off)."""
+    if cfg.split_threshold is None or not cfg.degree_aware_tiles:
+        return None
+    if cfg.split_threshold == "auto":
+        # cap every kernel row at the bucket's MEAN row-block load (a row at
+        # the mean cannot raise T above it) but never below one tile width —
+        # sub-tile chunks cost R without shrinking T.
+        return max(cfg.tile_eb, -(-int(bucket_edges) // max(r_blocks, 1)))
+    return int(cfg.split_threshold)
+
+
 def _build_tile_layouts(p, l, vpc, src_gidx, dst_lidx, valid, weights, cfg, sub_size):
     """Bin every (core, phase) bucket into (R, T, Eb) row-block tiles, bit-pack
     each slot's index triple into the compressed word stream, and stack to
-    (p, l, R, T, Eb) with a uniform T (max over buckets; padded tiles are
+    (p, l, R, T, Eb) with uniform (R, T) (max over buckets; padded tiles are
     recorded in ``tile_counts`` so the kernel skips them) so the engine
-    launches all cores of a phase in one pallas_call."""
+    launches all cores of a phase in one pallas_call. Hub rows above the
+    split threshold become virtual rows (see prepare_tiles); when any bucket
+    split, ``tile_row_orig``/``tile_split_map`` replace ``tile_row_pos`` and
+    the engine runs the two-level reduce."""
     from repro.kernels.csr_gather_reduce.ops import (
         choose_src_bits,
         prepare_tiles,
+        split_map_from_row_orig,
         stack_packed_tiles,
     )
 
@@ -308,6 +365,9 @@ def _build_tile_layouts(p, l, vpc, src_gidx, dst_lidx, valid, weights, cfg, sub_
                 num_rows=vpc, vb=vb, eb=eb,
                 weights=weights[i, m] if weights is not None else None,
                 balance_rows=cfg.degree_aware_tiles,
+                split_threshold=_bucket_split_threshold(
+                    cfg, int(valid[i, m].sum()), vpc // vb
+                ),
             )
             for m in range(l)
         ]
@@ -324,16 +384,44 @@ def _build_tile_layouts(p, l, vpc, src_gidx, dst_lidx, valid, weights, cfg, sub_
     tile_weights = (
         wts.reshape(p, l, r_blocks, t_max, eb) if wts is not None else None
     )
-    any_packed = any(t.row_pos is not None for row in layouts for t in row)
-    tile_row_pos = (
-        np.tile(np.arange(vpc, dtype=np.int32), (p, l, 1)) if any_packed else None
-    )
-    if tile_row_pos is not None:
+    any_split = any(t.row_orig is not None for row in layouts for t in row)
+    tile_row_pos = tile_row_orig = tile_split_map = None
+    split_rows = 0
+    t_max_unsplit = max(t.t_tiles_unsplit for t in flat)
+    if any_split:
+        # every bucket needs a row_orig map (split or not) so one uniform
+        # (p, l, Vl, S_max) gather drives the engine's level-2 combine.
+        packed_rows = r_blocks * vb
+        tile_row_orig = np.full((p, l, packed_rows), -1, dtype=np.int32)
+        maps = []
         for i in range(p):
             for m in range(l):
                 t = layouts[i][m]
-                if t.row_pos is not None:
-                    tile_row_pos[i, m] = t.row_pos
+                if t.row_orig is not None:
+                    ro = t.row_orig
+                elif t.row_pos is not None:
+                    ro = np.full(vpc, -1, dtype=np.int32)
+                    ro[t.row_pos] = np.arange(vpc, dtype=np.int32)
+                else:
+                    ro = np.arange(vpc, dtype=np.int32)
+                tile_row_orig[i, m, : ro.shape[0]] = ro
+                maps.append(split_map_from_row_orig(tile_row_orig[i, m], vpc))
+                split_rows += t.num_split_rows
+        s_max = max(sm.shape[1] for sm in maps)
+        tile_split_map = np.full((p, l, vpc, s_max), -1, dtype=np.int32)
+        for b, sm in enumerate(maps):
+            tile_split_map[b // l, b % l, :, : sm.shape[1]] = sm
+    else:
+        any_packed = any(t.row_pos is not None for row in layouts for t in row)
+        tile_row_pos = (
+            np.tile(np.arange(vpc, dtype=np.int32), (p, l, 1)) if any_packed else None
+        )
+        if tile_row_pos is not None:
+            for i in range(p):
+                for m in range(l):
+                    t = layouts[i][m]
+                    if t.row_pos is not None:
+                        tile_row_pos[i, m] = t.row_pos
     return dict(
         tile_word=tile_word,
         tile_word_hi=tile_word_hi,
@@ -342,6 +430,10 @@ def _build_tile_layouts(p, l, vpc, src_gidx, dst_lidx, valid, weights, cfg, sub_
         tile_row_pos=tile_row_pos,
         tile_vb=vb,
         src_bits=src_bits,
+        tile_row_orig=tile_row_orig,
+        tile_split_map=tile_split_map,
+        split_rows=split_rows,
+        t_max_unsplit=t_max_unsplit,
     )
 
 

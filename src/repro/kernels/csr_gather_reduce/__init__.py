@@ -6,9 +6,11 @@ from repro.kernels.csr_gather_reduce.kernel import (  # noqa: F401
 from repro.kernels.csr_gather_reduce.ops import (  # noqa: F401
     TileLayout,
     choose_src_bits,
+    combine_split_rows,
     gather_reduce,
     pack_edge_words,
     prepare_tiles,
     segment_reduce_rows,
+    split_map_from_row_orig,
     stack_packed_tiles,
 )

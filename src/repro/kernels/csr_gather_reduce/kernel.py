@@ -213,6 +213,15 @@ def gather_reduce_cores_pallas(
     Core ``c``'s output rows [r*vb, (r+1)*vb) are revisited across the T edge
     tiles of row block r (buffered writer) and written to HBM once; VMEM holds
     one (Eb,) word tile per operand plus the (G,) scratch pad at any time.
+
+    Hub-row splitting (two-level reduce): output rows may be VIRTUAL — a
+    partition-time split of one natural hub row into even chunks, each packed
+    into its own slot so no single row block carries the whole hub and T_max
+    stays near the mean block load. The kernel is oblivious: it reduces each
+    packed row independently (level 1; rows it never touches keep the
+    ``identity`` written at t == 0, which is what makes spare slots safe for
+    the combine). The engine folds the partials into natural rows afterwards
+    with the problem's reduce op (level 2, ``combine_split_rows``).
     """
     p, r_blocks, t_tiles, eb = word.shape
     assert r_blocks * vb == num_rows, (word.shape, vb, num_rows)

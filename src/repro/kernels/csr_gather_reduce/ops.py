@@ -1,12 +1,19 @@
 """Host-side tile preparation + jitted wrapper for the accumulator kernel.
 
 ``prepare_tiles`` bins a (dst-sorted) edge bucket into (R, T, Eb) row-block
-tiles at partition time (numpy). ``pack_edge_words`` bit-packs the
-(src, dstb, valid) index triple of each edge slot into the compressed word
-stream the fused engine path reads (see ``kernel.py`` for the word format and
-``choose_src_bits`` for the 16/32-bit regime rule). ``gather_reduce`` runs the
-Pallas kernel; ``segment_reduce_rows`` is the reduce-only variant used when
-contributions are already materialized (engine fallback path).
+tiles at partition time (numpy). With ``split_threshold`` set it also SPLITS
+hub rows whose edge count exceeds the threshold into multiple *virtual rows*
+(even chunks) before LPT packing, so a single fat row no longer sets T for
+the whole bucket; the kernel then reduces each virtual row independently
+(level 1) and ``combine_split_rows`` merges the virtual-row partials back
+into true rows with the problem's reduce op (level 2) — the TPU analogue of
+the paper's two-level crossbar absorbing power-law skew. ``pack_edge_words``
+bit-packs the (src, dstb, valid) index triple of each edge slot into the
+compressed word stream the fused engine path reads (see ``kernel.py`` for the
+word format and ``choose_src_bits`` for the 16/32-bit regime rule).
+``gather_reduce`` runs the Pallas kernel; ``segment_reduce_rows`` is the
+reduce-only variant used when contributions are already materialized (engine
+fallback path).
 """
 from __future__ import annotations
 
@@ -25,6 +32,8 @@ __all__ = [
     "choose_src_bits",
     "pack_edge_words",
     "stack_packed_tiles",
+    "split_map_from_row_orig",
+    "combine_split_rows",
     "gather_reduce",
     "segment_reduce_rows",
 ]
@@ -92,41 +101,54 @@ def stack_packed_tiles(
     layouts: list[TileLayout], *, src_bits: int
 ) -> tuple[np.ndarray, np.ndarray | None, np.ndarray, np.ndarray | None]:
     """Pack each layout's (src, dstb, valid) triple and stack to one
-    uniform-T compressed stream: ``(word, word_hi, counts, weights)`` with
-    shapes (n, R, T_max, Eb) / (n, R). Layouts shorter than T_max are padded
-    with all-invalid words that ``counts`` tells the kernel to skip. The
+    uniform-(R, T) compressed stream: ``(word, word_hi, counts, weights)``
+    with shapes (n, R_max, T_max, Eb) / (n, R_max). Layouts shorter than
+    R_max / T_max are padded with all-invalid words that ``counts`` (0 for
+    padded row blocks) tells the kernel to skip. The
     single source of truth for the stream layout the engine, benchmarks, and
     tests consume."""
     n = len(layouts)
-    r_blocks, _, eb = layouts[0].src.shape
+    eb = layouts[0].src.shape[2]
+    # hub-row splitting can grow R per bucket; pad both R and T to the max
+    # (extra blocks have counts 0, so the kernel's early-out skips them).
+    r_max = max(t.src.shape[0] for t in layouts)
     t_max = max(t.src.shape[1] for t in layouts)
-    word = np.zeros((n, r_blocks, t_max, eb), np.int32)
-    word_hi = np.zeros((n, r_blocks, t_max, eb), np.int32) if src_bits == 32 else None
-    counts = np.zeros((n, r_blocks), np.int32)
+    word = np.zeros((n, r_max, t_max, eb), np.int32)
+    word_hi = np.zeros((n, r_max, t_max, eb), np.int32) if src_bits == 32 else None
+    counts = np.zeros((n, r_max), np.int32)
     any_w = any(t.weights is not None for t in layouts)
-    weights = np.zeros((n, r_blocks, t_max, eb), np.float32) if any_w else None
+    weights = np.zeros((n, r_max, t_max, eb), np.float32) if any_w else None
     for i, t in enumerate(layouts):
-        tt = t.src.shape[1]
+        rr, tt = t.src.shape[:2]
         w0, w1 = pack_edge_words(t.src, t.dstb, t.valid, src_bits=src_bits)
-        word[i, :, :tt] = w0
+        word[i, :rr, :tt] = w0
         if word_hi is not None:
-            word_hi[i, :, :tt] = w1
-        counts[i] = t.tile_counts
+            word_hi[i, :rr, :tt] = w1
+        counts[i, :rr] = t.tile_counts
         if weights is not None and t.weights is not None:
-            weights[i, :, :tt] = t.weights
+            weights[i, :rr, :tt] = t.weights
     return word, word_hi, counts, weights
 
 
 @dataclasses.dataclass(frozen=True)
 class TileLayout:
-    """(R, T, Eb) row-block binned edges; padding slots have valid=False."""
+    """(R, T, Eb) row-block binned edges; padding slots have valid=False.
+
+    With hub-row splitting engaged (``row_orig`` set) the R*vb kernel-output
+    positions hold VIRTUAL rows: a natural row above the split threshold owns
+    several of them, each reduced independently by the kernel, and R may
+    exceed ``num_rows / vb``. ``row_orig`` maps every packed position back to
+    its natural row (-1 = spare slot, holds the reduce identity); the
+    second-level combine (``combine_split_rows``) folds the partials together.
+    ``row_pos`` and ``row_orig`` are mutually exclusive.
+    """
 
     src: np.ndarray  # (R, T, Eb) int32
     dstb: np.ndarray  # (R, T, Eb) int32 in [0, vb)
     valid: np.ndarray  # (R, T, Eb) bool
     weights: np.ndarray | None  # (R, T, Eb) f32
     vb: int
-    num_rows: int
+    num_rows: int  # NATURAL rows (combine output size); packed rows = R * vb
     # slot -> index into the ORIGINAL (pre-binning) edge arrays, 0 on padding.
     # Lets runtime-traced per-edge values (e.g. GAT scores) be laid out into
     # tile order with one static gather.
@@ -137,6 +159,13 @@ class TileLayout:
     # real edge tiles per row block: ceil(real_edges[r] / Eb). Tiles with
     # t >= tile_counts[r] are all-padding; the fused kernel skips them.
     tile_counts: np.ndarray | None = None  # (R,) int32
+    # hub-row splitting (level-2 reduce): packed position -> natural row
+    # (-1 = spare slot carrying the reduce identity). None = no row was split.
+    row_orig: np.ndarray | None = None  # (R * vb,) int32
+    num_split_rows: int = 0  # natural rows split into > 1 virtual rows
+    # T this bucket would have needed WITHOUT splitting (== own T when no row
+    # was split) — the denominator of the t_max_reduction metric.
+    t_tiles_unsplit: int = 0
 
     @property
     def tile_padding_ratio(self) -> float:
@@ -163,6 +192,16 @@ def _balance_row_blocks(row_counts: np.ndarray, r_blocks: int, vb: int) -> np.nd
     return row_pos
 
 
+def _lpt_max_load(row_counts: np.ndarray, r_blocks: int, vb: int) -> int:
+    """Max per-block edge load the LPT packer achieves WITHOUT splitting."""
+    if r_blocks <= 1:
+        return int(row_counts.sum())
+    pos = _balance_row_blocks(row_counts, r_blocks, vb)
+    loads = np.bincount(pos // vb, weights=row_counts.astype(np.float64),
+                        minlength=r_blocks)
+    return int(loads.max())
+
+
 def prepare_tiles(
     src_gidx: np.ndarray,  # (E,) int32
     dst_lidx: np.ndarray,  # (E,) int32, sorted ascending
@@ -173,7 +212,20 @@ def prepare_tiles(
     weights: np.ndarray | None = None,
     *,
     balance_rows: bool = False,
+    split_threshold: int | None = None,
 ) -> TileLayout:
+    """Bin one (dst-sorted) edge bucket into (R, T, Eb) row-block tiles.
+
+    ``split_threshold`` (requires ``balance_rows``: virtual rows only help
+    when the LPT packer can spread them) caps the edge count of any single
+    kernel-output row: a natural row with more edges is split into
+    ``ceil(count / threshold)`` even chunks, each a virtual row the packer
+    places independently — R grows past ``num_rows / vb`` when the virtual
+    rows need the slots. The returned layout then carries ``row_orig`` and
+    the caller must apply the second-level combine (``combine_split_rows``).
+    When no row exceeds the threshold the output is byte-for-byte identical
+    to the unsplit layout.
+    """
     assert num_rows % vb == 0, (num_rows, vb)
     r_blocks = num_rows // vb
     src_gidx = np.asarray(src_gidx)
@@ -185,9 +237,41 @@ def prepare_tiles(
     src_r = src_gidx[keep]
     dst_r = dst_lidx[keep]
     w_r = weights[keep] if weights is not None else None
-    row_pos = None
-    if balance_rows and r_blocks > 1:
-        row_counts = np.bincount(dst_r, minlength=num_rows)
+    row_pos = row_orig = None
+    num_split_rows = 0
+    t_unsplit = None
+    row_counts = np.bincount(dst_r, minlength=num_rows)
+    thr = max(int(split_threshold), 1) if split_threshold is not None else None
+    do_split = (
+        balance_rows and thr is not None and bool((row_counts > thr).any())
+    )
+    if do_split:
+        # level-1 layout over VIRTUAL rows: chunk c of natural row v holds
+        # the edges j with j * n_chunks[v] // count[v] == c (even split, so
+        # chunk sizes differ by at most 1 and never exceed thr).
+        n_chunks = np.maximum(1, -(-row_counts // thr)).astype(np.int64)
+        num_split_rows = int((n_chunks > 1).sum())
+        num_virtual = int(n_chunks.sum())
+        r_blocks = max(r_blocks, -(-num_virtual // vb))
+        t_unsplit = max(1, -(-_lpt_max_load(row_counts, num_rows // vb, vb) // eb))
+        virt_base = np.cumsum(n_chunks) - n_chunks  # (num_rows,)
+        virt_orig = np.repeat(
+            np.arange(num_rows, dtype=np.int64), n_chunks
+        )  # (num_virtual,)
+        row_starts = np.cumsum(row_counts) - row_counts
+        pos_in_row = np.arange(dst_r.shape[0], dtype=np.int64) - row_starts[dst_r]
+        chunk = pos_in_row * n_chunks[dst_r] // np.maximum(row_counts[dst_r], 1)
+        vrow = virt_base[dst_r] + chunk
+        virt_counts = np.bincount(vrow, minlength=num_virtual)
+        pos_v = _balance_row_blocks(virt_counts, r_blocks, vb)
+        row_orig = np.full(r_blocks * vb, -1, dtype=np.int32)
+        row_orig[pos_v] = virt_orig
+        pdst = pos_v[vrow]
+        order = np.argsort(pdst // vb, kind="stable")
+        src_r, pdst, orig_idx = src_r[order], pdst[order], orig_idx[order]
+        if w_r is not None:
+            w_r = w_r[order]
+    elif balance_rows and r_blocks > 1:
         row_pos = _balance_row_blocks(row_counts, r_blocks, vb)
         pdst = row_pos[dst_r]
         # packed positions are not sorted; regroup by block, keeping the
@@ -221,7 +305,53 @@ def prepare_tiles(
         src=src_t, dstb=dst_t, valid=val_t, weights=w_t, vb=vb,
         num_rows=num_rows, gather_idx=gat_t, row_pos=row_pos,
         tile_counts=(-(-counts // eb)).astype(np.int32),
+        row_orig=row_orig, num_split_rows=num_split_rows,
+        t_tiles_unsplit=t_unsplit if t_unsplit is not None else t_tiles,
     )
+
+
+def split_map_from_row_orig(row_orig: np.ndarray, num_rows: int) -> np.ndarray:
+    """Invert a packed-position -> natural-row map into the gather form the
+    second-level combine consumes: ``(num_rows, S_max)`` packed positions per
+    natural row, padded with -1. Every natural row owns at least one virtual
+    row (empty rows get one whose kernel output is the reduce identity), so
+    column 0 is always a real position."""
+    row_orig = np.asarray(row_orig)
+    pos = np.nonzero(row_orig >= 0)[0]
+    orig = row_orig[pos].astype(np.int64)
+    order = np.argsort(orig, kind="stable")
+    orig_s, pos_s = orig[order], pos[order]
+    counts = np.bincount(orig_s, minlength=num_rows)
+    assert counts.min() >= 1, "every natural row must own >= 1 virtual row"
+    s_max = int(counts.max())
+    starts = np.cumsum(counts) - counts
+    rank = np.arange(pos_s.shape[0], dtype=np.int64) - starts[orig_s]
+    out = np.full((num_rows, s_max), -1, dtype=np.int32)
+    out[orig_s, rank] = pos_s
+    return out
+
+
+def combine_split_rows(
+    reduced: jnp.ndarray,  # (..., P) level-1 kernel output over packed rows
+    split_map: jnp.ndarray,  # (..., num_rows, S) packed positions, -1 = pad
+    *,
+    kind: str,  # 'min' | 'sum' — the problem's reduce UDF
+    identity: float,  # the SAME problem's identity (INF for min, 0 for sum)
+) -> jnp.ndarray:
+    """Level-2 reduce: fold virtual-row partials into natural rows.
+
+    Must use the problem's own reduce op and identity: padding entries
+    (-1) contribute ``identity``, so a min-problem sees INF (never 0) and a
+    sum-problem sees exactly 0.0 — a split row is neither double-counted nor
+    corrupted. Gather-based (static shapes, S_max is small), so min problems
+    stay bit-identical to the oracle: min over partial mins == total min.
+    """
+    *lead, v, s = split_map.shape
+    idx = jnp.maximum(split_map, 0)
+    vals = jnp.take_along_axis(reduced, idx.reshape(*lead, v * s), axis=-1)
+    ident = jnp.asarray(identity, reduced.dtype)
+    vals = jnp.where(split_map >= 0, vals.reshape(split_map.shape), ident)
+    return jnp.min(vals, axis=-1) if kind == "min" else jnp.sum(vals, axis=-1)
 
 
 def gather_reduce(
@@ -235,6 +365,9 @@ def gather_reduce(
     use_reference: bool = False,
 ) -> jnp.ndarray:
     """Run the accumulator over one (core, phase) bucket."""
+    # with hub-row splitting the kernel reduces PACKED (virtual) rows — may
+    # be more than the natural num_rows — and level 2 folds them back.
+    packed_rows = tiles.src.shape[0] * tiles.vb
     if use_reference:
         r_blocks = tiles.src.shape[0]
         block_base = np.arange(r_blocks, dtype=np.int32)[:, None, None] * tiles.vb
@@ -252,7 +385,7 @@ def gather_reduce(
             jnp.asarray(tiles.src).reshape(-1),
             jnp.asarray(tiles.dstb + block_base).reshape(-1),
             jnp.asarray(tiles.valid).reshape(-1),
-            tiles.num_rows,
+            packed_rows,
             kind=kind,
             identity=identity,
             weights=ref_w,
@@ -264,14 +397,17 @@ def gather_reduce(
             jnp.asarray(tiles.dstb),
             jnp.asarray(tiles.valid),
             jnp.asarray(tiles.weights) if tiles.weights is not None else None,
-            num_rows=tiles.num_rows,
+            num_rows=packed_rows,
             vb=tiles.vb,
             kind=kind,
             edge_op=edge_op,
             identity=identity,
             interpret=interpret,
         )
-    if tiles.row_pos is not None:  # undo degree-aware row packing
+    if tiles.row_orig is not None:  # level-2 reduce over virtual-row partials
+        sm = split_map_from_row_orig(tiles.row_orig, tiles.num_rows)
+        out = combine_split_rows(out, jnp.asarray(sm), kind=kind, identity=identity)
+    elif tiles.row_pos is not None:  # undo degree-aware row packing
         out = jnp.take(out, jnp.asarray(tiles.row_pos), axis=0)
     return out
 

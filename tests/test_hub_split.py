@@ -1,0 +1,371 @@
+"""Hub-row splitting (two-level reduce) suite — ISSUE 3.
+
+Covers the split layout invariants, the LPT/prepare_tiles edge cases splitting
+exposes (a row holding most of the bucket, multi-way splits bigger than the
+unsplit T_max * Eb, empty buckets), equivalence of split-Pallas vs
+unsplit-Pallas vs the XLA oracle across BFS/WCC/SSSP/PR, the identity-element
+regression (a min-problem's split combine must fold with the problem's
+identity — INF — and never inject the sum identity 0), and the
+disable-switch (``split_threshold=None`` preserves the pre-split layout
+byte for byte).
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+import repro.core.graph as G
+from repro.core.engine import EngineOptions, run
+from repro.core.partition import PartitionConfig, partition_2d
+from repro.core.problems import INF_U32, bfs, pagerank, sssp, wcc
+from repro.data.synthetic import skewed_graph
+from repro.kernels.csr_gather_reduce.ops import (
+    combine_split_rows,
+    gather_reduce,
+    prepare_tiles,
+    split_map_from_row_orig,
+)
+
+PROBLEMS = ["bfs", "wcc", "sssp", "pagerank"]
+
+# sum (PR) reassociates across virtual-row chunks — tight tolerance; min
+# problems must be bit-identical (same contract as the rest of the suite).
+PR_TOL = dict(rtol=2e-5, atol=1e-8)
+
+
+def _hub_graph(rng, n=512, hub=3, hub_deg=3000, bg=1000):
+    """Multigraph with one dominant in-degree hub + uniform background."""
+    src = np.concatenate([
+        rng.integers(0, n, hub_deg), rng.integers(0, n, bg)
+    ]).astype(np.uint32)
+    dst = np.concatenate([
+        np.full(hub_deg, hub, np.int64), rng.integers(0, n, bg)
+    ]).astype(np.uint32)
+    return G.COOGraph(src=src, dst=dst, num_vertices=n)
+
+
+def _weighted(g, rng):
+    w = rng.random(g.num_edges).astype(np.float32)
+    return G.COOGraph(src=g.src, dst=g.dst, num_vertices=g.num_vertices, weights=w)
+
+
+def _problem(pname, g, rng):
+    if pname == "bfs":
+        return bfs(1), g
+    if pname == "wcc":
+        return wcc(), g
+    if pname == "sssp":
+        return sssp(1), _weighted(g, rng)
+    return pagerank(tol=1e-4), g
+
+
+# ---------------------------------------------------------------------------
+# prepare_tiles splitting edge cases
+# ---------------------------------------------------------------------------
+
+
+def test_split_layout_invariants():
+    """Virtual rows partition every natural row's edges; row_orig covers all
+    natural rows; chunk sizes respect the threshold."""
+    rng = np.random.default_rng(0)
+    v, e, thr = 64, 900, 40
+    dst = np.sort(rng.integers(0, v, e)).astype(np.int32)
+    dst[: e // 2] = 5  # hub row
+    dst = np.sort(dst)
+    src = rng.integers(0, 128, e).astype(np.int32)
+    t = prepare_tiles(src, dst, np.ones(e, bool), num_rows=v, vb=8, eb=16,
+                      balance_rows=True, split_threshold=thr)
+    assert t.row_orig is not None and t.row_pos is None
+    assert t.num_split_rows >= 1
+    packed_rows = t.src.shape[0] * t.vb
+    assert t.row_orig.shape == (packed_rows,)
+    # every natural row owns >= 1 virtual row; hub owns ceil(450/40) = 12
+    owned = np.bincount(t.row_orig[t.row_orig >= 0], minlength=v)
+    assert owned.min() >= 1
+    assert owned[5] == -(-int((dst == 5).sum()) // thr)
+    # per-virtual-row edge counts never exceed the threshold
+    block_rows = t.dstb + (np.arange(t.src.shape[0])[:, None, None] * t.vb)
+    per_pos = np.bincount(block_rows[t.valid], minlength=packed_rows)
+    assert per_pos.max() <= thr
+    # edges per natural row are conserved through the split
+    orig_per_pos = t.row_orig.copy()
+    recon = np.zeros(v, np.int64)
+    np.add.at(recon, orig_per_pos[orig_per_pos >= 0], per_pos[orig_per_pos >= 0])
+    np.testing.assert_array_equal(recon, np.bincount(dst, minlength=v))
+    # split_map inverts row_orig
+    sm = split_map_from_row_orig(t.row_orig, v)
+    assert sm.shape[0] == v and (sm[:, 0] >= 0).all()
+    for row in range(v):
+        np.testing.assert_array_equal(
+            np.sort(sm[row][sm[row] >= 0]), np.nonzero(t.row_orig == row)[0]
+        )
+
+
+def test_single_row_majority_of_edges():
+    """A row holding > 50% of the bucket's edges must split and T must drop
+    vs the unsplit layout; reductions stay correct."""
+    rng = np.random.default_rng(1)
+    v, vb, eb = 32, 8, 8
+    hub_e, bg_e = 600, 200
+    dst = np.sort(np.concatenate([
+        np.full(hub_e, 9), rng.integers(0, v, bg_e)
+    ]).astype(np.int32))
+    e = dst.shape[0]
+    src = rng.integers(0, 64, e).astype(np.int32)
+    un = prepare_tiles(src, dst, np.ones(e, bool), num_rows=v, vb=vb, eb=eb,
+                       balance_rows=True)
+    sp = prepare_tiles(src, dst, np.ones(e, bool), num_rows=v, vb=vb, eb=eb,
+                       balance_rows=True, split_threshold=64)
+    assert sp.src.shape[1] < un.src.shape[1]  # T shrinks
+    assert sp.t_tiles_unsplit == un.src.shape[1]
+    payload = jnp.asarray(rng.random(64).astype(np.float32))
+    for kind, ident in (("min", float(np.finfo(np.float32).max)), ("sum", 0.0)):
+        a = gather_reduce(payload, sp, kind=kind, identity=ident)
+        b = gather_reduce(payload, un, kind=kind, identity=ident)
+        if kind == "min":
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        else:
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b), **PR_TOL)
+
+
+def test_multiway_split_row_bigger_than_tmax_eb():
+    """A hub bigger than the whole rest of the bucket times T_max*Eb forces a
+    many-way split; R must grow past num_rows/vb to hold the virtual rows."""
+    rng = np.random.default_rng(2)
+    v, vb, eb = 16, 8, 8
+    hub_e = 1000
+    dst = np.sort(np.concatenate([
+        np.full(hub_e, 2), rng.integers(0, v, 50)
+    ]).astype(np.int32))
+    src = rng.integers(0, 32, dst.shape[0]).astype(np.int32)
+    sp = prepare_tiles(src, dst, np.ones(dst.shape[0], bool), num_rows=v,
+                       vb=vb, eb=eb, balance_rows=True, split_threshold=eb)
+    n_chunks = -(-int((dst == 2).sum()) // eb)  # ~125 virtual rows, one row
+    assert (sp.row_orig == 2).sum() == n_chunks
+    assert sp.src.shape[0] > v // vb  # R grew
+    payload = jnp.asarray(rng.random(32).astype(np.float32))
+    out = gather_reduce(payload, sp, kind="min",
+                        identity=float(np.finfo(np.float32).max))
+    ref = prepare_tiles(src, dst, np.ones(dst.shape[0], bool), num_rows=v,
+                        vb=vb, eb=eb)
+    expect = gather_reduce(payload, ref, kind="min",
+                           identity=float(np.finfo(np.float32).max))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(expect))
+
+
+def test_empty_bucket_and_empty_blocks():
+    """Empty (core, phase) buckets and rows with zero edges survive the split
+    path: counts 0, one virtual row per natural row, identity outputs."""
+    t = prepare_tiles(np.zeros(0, np.int32), np.zeros(0, np.int32),
+                      np.zeros(0, bool), num_rows=16, vb=4, eb=4,
+                      balance_rows=True, split_threshold=2)
+    assert t.row_orig is None and t.num_split_rows == 0  # nothing to split
+    out = gather_reduce(jnp.ones(8, jnp.float32), t, kind="min", identity=7.0)
+    np.testing.assert_array_equal(np.asarray(out), np.full(16, 7.0, np.float32))
+
+
+# ---------------------------------------------------------------------------
+# engine-level equivalence: split-Pallas vs unsplit-Pallas vs XLA oracle
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("pname", PROBLEMS)
+def test_engine_split_three_way(pname, rng):
+    g0 = _hub_graph(rng)
+    prob, g = _problem(pname, g0, rng)
+    cfg = dict(p=2, l=2, lane=8, tile_vb=32, tile_eb=32)
+    pg_split = partition_2d(g, PartitionConfig(**cfg))
+    pg_none = partition_2d(g, PartitionConfig(**cfg, split_threshold=None))
+    assert pg_split.split_rows > 0, "hub graph must trigger splitting"
+    assert pg_split.tile_split_map is not None
+    assert pg_split.tile_word.shape[3] < pg_none.tile_word.shape[3]
+    # tile_split_map is exactly the gather form of tile_row_orig — the engine
+    # reads the former, tests/debugging read the latter; they must not drift
+    vl, s_max = pg_split.tile_split_map.shape[2:]
+    for i in range(pg_split.p):
+        for m in range(pg_split.l):
+            sm = split_map_from_row_orig(pg_split.tile_row_orig[i, m], vl)
+            expect = np.full((vl, s_max), -1, np.int32)
+            expect[:, : sm.shape[1]] = sm
+            np.testing.assert_array_equal(pg_split.tile_split_map[i, m], expect)
+
+    res_s = run(prob, g, pg_split, EngineOptions(backend="pallas"))
+    res_u = run(prob, g, pg_none, EngineOptions(backend="pallas"))
+    res_x = run(prob, g, pg_none, EngineOptions(backend="xla"))
+    if prob.reduce_kind == "min":
+        np.testing.assert_array_equal(res_s.labels["label"], res_x.labels["label"])
+        np.testing.assert_array_equal(res_u.labels["label"], res_x.labels["label"])
+        assert res_s.iterations == res_u.iterations == res_x.iterations
+    else:
+        np.testing.assert_allclose(
+            res_s.labels["label"], res_x.labels["label"], **PR_TOL
+        )
+        np.testing.assert_allclose(
+            res_u.labels["label"], res_x.labels["label"], **PR_TOL
+        )
+
+
+@pytest.mark.parametrize("immediate", [True, False])
+def test_engine_split_update_schemes(immediate, rng):
+    """Async (immediate) and sync phases both run the level-2 combine."""
+    g = _hub_graph(rng, n=256, hub_deg=1500, bg=600)
+    pg = partition_2d(
+        g, PartitionConfig(p=2, l=2, lane=8, tile_vb=16, tile_eb=16)
+    )
+    assert pg.split_rows > 0
+    a = run(bfs(0), g, pg, EngineOptions(immediate_updates=immediate,
+                                         backend="pallas"))
+    b = run(bfs(0), g, pg, EngineOptions(immediate_updates=immediate,
+                                         backend="xla"))
+    np.testing.assert_array_equal(a.labels["label"], b.labels["label"])
+    assert a.iterations == b.iterations
+
+
+def test_engine_split_32bit_regime(rng):
+    """Splitting composes with the 32-bit packed-word fallback."""
+    gs = G.symmetrize(_hub_graph(rng, n=256, hub_deg=1500, bg=600))
+    pgs = partition_2d(gs, PartitionConfig(p=2, l=2, lane=8, tile_vb=16,
+                                           tile_eb=16, pack_src_bits=32))
+    assert pgs.split_rows > 0 and pgs.src_bits == 32
+    assert pgs.tile_word_hi is not None
+    a = run(wcc(), gs, pgs, EngineOptions(backend="pallas"))
+    b = run(wcc(), gs, pgs, EngineOptions(backend="xla"))
+    np.testing.assert_array_equal(a.labels["label"], b.labels["label"])
+
+
+# ---------------------------------------------------------------------------
+# identity-element regression (satellite: the level-2 combine must use the
+# problem's reduce identity — min folds with INF, sum with 0)
+# ---------------------------------------------------------------------------
+
+
+def test_combine_uses_reduce_identity_not_zero():
+    """Padded split_map entries contribute the problem's identity: a wrong
+    0-identity in a min combine would zero every label; a wrong INF in a sum
+    combine would blow it up; reusing a real position would double-count."""
+    reduced = jnp.asarray(np.array([5.0, 7.0, 11.0, 2.0], np.float32))
+    # row 0 owns positions {0, 2}; row 1 owns {3} with one padded entry
+    sm = jnp.asarray(np.array([[0, 2], [3, -1]], np.int32))
+    out_min = combine_split_rows(reduced, sm, kind="min", identity=float(np.inf))
+    np.testing.assert_array_equal(np.asarray(out_min), [5.0, 2.0])
+    out_sum = combine_split_rows(reduced, sm, kind="sum", identity=0.0)
+    np.testing.assert_array_equal(np.asarray(out_sum), [16.0, 2.0])
+    # uint32 min path (BFS/WCC labels): identity INF_U32 survives the cast
+    red_u = jnp.asarray(np.array([3, INF_U32, 9, 1], np.uint32))
+    out_u = combine_split_rows(red_u, sm, kind="min", identity=float(INF_U32))
+    np.testing.assert_array_equal(np.asarray(out_u), [3, 1])
+
+
+def test_bfs_unreached_hub_row_stays_inf(rng):
+    """Regression: a split hub row NOT reached by BFS must stay INF_U32 —
+    any stray 0/sum-identity in the level-2 fold would mark it reached."""
+    n = 128
+    # hub 5 receives many edges from sources that BFS (rooted in a separate
+    # component) never reaches; component {0, 1} is root's.
+    hub_src = rng.integers(2, n, 800).astype(np.uint32)
+    src = np.concatenate([hub_src, np.array([0], np.uint32)])
+    dst = np.concatenate([np.full(800, 5, np.uint32), np.array([1], np.uint32)])
+    g = G.COOGraph(src=src, dst=dst, num_vertices=n)
+    pg = partition_2d(g, PartitionConfig(p=2, l=2, lane=8, tile_vb=8, tile_eb=8))
+    assert pg.split_rows > 0
+    res = run(bfs(0), g, pg, EngineOptions(backend="pallas"))
+    assert res.labels["label"][1] == 1
+    assert res.labels["label"][5] == INF_U32  # hub unreached: identity held
+    oracle = run(bfs(0), g, pg, EngineOptions(backend="xla"))
+    np.testing.assert_array_equal(res.labels["label"], oracle.labels["label"])
+
+
+def test_pagerank_split_conserves_mass(rng):
+    """Sum identity regression: virtual-row partials must add each edge
+    exactly once — total rank mass is conserved under splitting."""
+    g = _hub_graph(rng, n=256, hub_deg=2000, bg=500)
+    cfg = dict(p=2, l=2, lane=8, tile_vb=16, tile_eb=16)
+    pg = partition_2d(g, PartitionConfig(**cfg))
+    assert pg.split_rows > 0
+    res = run(pagerank(tol=1e-5), g, pg, EngineOptions(backend="pallas"))
+    ref = run(pagerank(tol=1e-5), g, pg, EngineOptions(backend="xla"))
+    np.testing.assert_allclose(
+        res.labels["label"].sum(), ref.labels["label"].sum(), rtol=1e-5
+    )
+    np.testing.assert_allclose(res.labels["label"], ref.labels["label"], **PR_TOL)
+
+
+# ---------------------------------------------------------------------------
+# metrics + disable switch
+# ---------------------------------------------------------------------------
+
+
+def test_star_t_max_halved_and_metrics():
+    """Acceptance shape: on a star-like graph the split layout's T_max is
+    <= 50% of the unsplit layout's, and the metrics record it."""
+    g = skewed_graph(2048, kind="star", hub_in_degree=6000, avg_degree=2, seed=7)
+    cfg = dict(p=4, l=2, lane=8, tile_vb=64)
+    pg_split = partition_2d(g, PartitionConfig(**cfg))
+    pg_none = partition_2d(g, PartitionConfig(**cfg, split_threshold=None))
+    assert pg_split.tile_word.shape[3] <= 0.5 * pg_none.tile_word.shape[3]
+    assert pg_split.t_max_unsplit == pg_none.tile_word.shape[3]
+    assert pg_split.t_max_reduction <= 0.5
+    assert 0.0 < pg_split.split_row_fraction < 1.0
+    assert pg_split.skipped_tile_fraction < pg_none.skipped_tile_fraction
+    # splitting also shrinks the stacked stream itself
+    assert pg_split.tile_word.size < pg_none.tile_word.size
+    assert pg_none.t_max_reduction == 1.0 and pg_none.split_row_fraction == 0.0
+
+
+def test_split_threshold_none_preserves_old_layout():
+    """Disable switch: split_threshold=None must reproduce the pre-split
+    layout byte for byte (row_pos permutation, no split fields) even on a
+    graph whose default partition splits."""
+    g = skewed_graph(512, kind="star", hub_in_degree=2000, avg_degree=2, seed=3)
+    cfg = dict(p=2, l=2, lane=8, tile_vb=32, tile_eb=32)
+    pg_auto = partition_2d(g, PartitionConfig(**cfg))
+    pg_none = partition_2d(g, PartitionConfig(**cfg, split_threshold=None))
+    assert pg_auto.split_rows > 0
+    assert pg_none.tile_row_orig is None and pg_none.tile_split_map is None
+    assert pg_none.split_rows == 0
+    assert pg_none.tile_row_pos is not None
+    vpc = pg_none.vertices_per_core
+    for i in range(pg_none.p):
+        for m in range(pg_none.l):
+            assert sorted(pg_none.tile_row_pos[i, m].tolist()) == list(range(vpc))
+    # and byte-for-byte: None matches a manual unsplit prepare_tiles stack
+    from repro.kernels.csr_gather_reduce.ops import stack_packed_tiles
+
+    layouts = [
+        prepare_tiles(
+            pg_none.src_gidx[i, m], pg_none.dst_lidx[i, m], pg_none.valid[i, m],
+            num_rows=vpc, vb=pg_none.tile_vb, eb=32, balance_rows=True,
+        )
+        for i in range(pg_none.p)
+        for m in range(pg_none.l)
+    ]
+    word, _, counts, _ = stack_packed_tiles(layouts, src_bits=pg_none.src_bits)
+    np.testing.assert_array_equal(
+        pg_none.tile_word, word.reshape(pg_none.tile_word.shape)
+    )
+    np.testing.assert_array_equal(
+        pg_none.tile_counts, counts.reshape(pg_none.tile_counts.shape)
+    )
+
+
+def test_auto_threshold_no_hub_is_identical_to_disabled():
+    """'auto' on a hub-free graph never splits, so the layout equals the
+    disabled one exactly — the default is safe for every existing graph."""
+    g = G.symmetrize(G.rmat(8, 6, seed=13))
+    cfg = dict(p=2, l=2, lane=4)
+    pg_auto = partition_2d(g, PartitionConfig(**cfg))
+    pg_none = partition_2d(g, PartitionConfig(**cfg, split_threshold=None))
+    assert pg_auto.split_rows == 0 and pg_auto.tile_row_orig is None
+    np.testing.assert_array_equal(pg_auto.tile_word, pg_none.tile_word)
+    np.testing.assert_array_equal(pg_auto.tile_counts, pg_none.tile_counts)
+    np.testing.assert_array_equal(pg_auto.tile_row_pos, pg_none.tile_row_pos)
+
+
+def test_skewed_graph_generator_deterministic():
+    a = skewed_graph(256, kind="powerlaw", hub_in_degree=500, seed=5)
+    b = skewed_graph(256, kind="powerlaw", hub_in_degree=500, seed=5)
+    np.testing.assert_array_equal(a.src, b.src)
+    np.testing.assert_array_equal(a.dst, b.dst)
+    assert np.bincount(a.dst, minlength=256).max() <= 500
+    with pytest.raises(ValueError, match="star"):
+        skewed_graph(16, kind="ring")
