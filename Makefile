@@ -1,11 +1,22 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+# pin the CPU backend unless the caller chose one (libtpu is installed; an
+# unpinned probe of the absent TPU can hang multi-device collectives)
+export JAX_PLATFORMS ?= cpu
 
-.PHONY: test bench-smoke bench-engine bench check
+.PHONY: test bench-smoke bench-engine bench check check-dist
 
 # tier-1 verify (ROADMAP.md)
 test:
 	$(PYTHON) -m pytest -x -q
+
+# sharded job: the distributed engine + repro.dist suites under 8 simulated
+# memory channels (subprocess tests force their own device counts; the outer
+# flag covers the in-process multi-device cases)
+check-dist:
+	XLA_FLAGS="--xla_force_host_platform_device_count=8" $(PYTHON) -m pytest -x -q \
+		tests/test_distributed.py tests/test_distributed_equiv.py \
+		tests/test_elastic.py tests/test_fault_tolerance.py
 
 # tiny-graph engine-path sanity: metric keys + Pallas/XLA agreement (CI)
 bench-smoke:
@@ -19,4 +30,4 @@ bench-engine:
 bench:
 	$(PYTHON) -m benchmarks.run
 
-check: test bench-smoke
+check: test bench-smoke check-dist

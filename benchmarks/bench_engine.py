@@ -14,14 +14,26 @@ the two-level-reduce effect: ``t_max`` with hub-row splitting vs the unsplit
 layout's ``t_max`` (``t_max_reduction``, the stacked-stream shrink the single
 fattest row block used to dictate).
 
+The channel-scaling sweep (ISSUE 5) runs the DISTRIBUTED engine — the same
+compressed stream NamedSharding-placed one core per device — at 1/2/4/8
+simulated memory channels (``--xla_force_host_platform_device_count``, each
+count in its own subprocess because jax locks the device count at first
+init), recording per-channel ``stream_bytes_per_edge``,
+``skipped_tile_fraction``, iterations-to-convergence, and the
+distributed-vs-fused agreement boolean into ``BENCH_engine.json``.
+
 ``python -m benchmarks.bench_engine --smoke`` runs a tiny-graph CI variant:
-asserts the metric keys and Pallas/XLA agreement (no timing thresholds, no
-JSON write) so the perf path is exercised on every CI run.
+asserts the metric keys and Pallas/XLA agreement plus ONE multi-channel
+point (no timing thresholds, no JSON write) so both perf paths are
+exercised on every CI run.
 """
 from __future__ import annotations
 
 import json
+import os
 import pathlib
+import subprocess
+import sys
 
 import numpy as np
 
@@ -162,17 +174,124 @@ def _bench_skew(emit, records):
         )
 
 
+# ---------------------------------------------------------------------------
+# channel-scaling sweep: the distributed engine at 1/2/4/8 simulated memory
+# channels. Each count runs in a subprocess (jax locks the device count), the
+# parent merges the per-channel JSON records.
+# ---------------------------------------------------------------------------
+
+CHANNELS = (1, 2, 4, 8)
+
+# metric keys every per-channel record must carry (asserted by --smoke / CI)
+CHANNEL_METRIC_KEYS = (
+    "stream_bytes_per_edge", "skipped_tile_fraction", "iterations", "agreement",
+)
+
+
+def channel_record(p: int, scale: int = 10, degree: int = 8) -> dict:
+    """One channel count, run IN-PROCESS (the caller guarantees >= p devices):
+    distributed run vs fused single-process run on the same partition."""
+    import jax
+
+    from benchmarks.common import time_call as _time_call
+    from repro.core.distributed import (
+        build_distributed_run,
+        run_distributed,
+        shard_labels,
+    )
+    from repro.core.engine import prepare_labels
+    from repro.launch.mesh import make_graph_mesh
+
+    mesh = make_graph_mesh(p)
+    rec = {"channels": p}
+    g = G.symmetrize(G.rmat(scale, degree, seed=1))
+    gd = G.rmat(scale, degree, seed=1)
+    for pname, prob, graph, stride in (
+        ("bfs", bfs(3), g, 100),
+        ("pr", pagerank(tol=1e-4), gd, None),
+    ):
+        pg = partition_2d(graph, PartitionConfig(p=p, l=2, lane=8, stride=stride))
+        res_d = run_distributed(prob, graph, pg, mesh)
+        res_s = run(prob, graph, pg, EngineOptions(backend="pallas"))
+        agree = (
+            _labels_agree(prob, res_d.labels["label"], res_s.labels["label"])
+            and res_d.iterations == res_s.iterations
+        )
+        # steady-state timing: build the runner ONCE and time repeated calls
+        # (run_distributed rebuilds + retraces per call — compile-dominated
+        # numbers made the channel trend an artifact; matches the fused
+        # baseline, whose _run_jit cache is warm after the run() above)
+        run_fn = build_distributed_run(prob, pg, mesh)
+        sharded = shard_labels(prepare_labels(prob, graph, pg), mesh)
+        t = _time_call(lambda: jax.block_until_ready(run_fn(sharded)))
+        rec[pname] = {
+            "stream_bytes_per_edge": pg.stream_bytes_per_edge,
+            "skipped_tile_fraction": pg.skipped_tile_fraction,
+            "iterations": res_d.iterations,
+            "agreement": bool(agree),
+            "distributed_us": t * 1e6,
+            "distributed_mteps": mteps(graph.num_edges, t),
+        }
+    return rec
+
+
+def _spawn_channel_child(p: int, extra_args=()) -> dict:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={p}"
+    env.setdefault("JAX_PLATFORMS", "cpu")  # libtpu present: pin CPU backend
+    env["PYTHONPATH"] = "src" + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else ""
+    )
+    res = subprocess.run(
+        [sys.executable, "-m", "benchmarks.bench_engine",
+         "--channel-child", str(p), *extra_args],
+        capture_output=True, text=True, env=env, cwd=str(JSON_PATH.parent),
+        timeout=1200,
+    )
+    assert res.returncode == 0, f"STDOUT:\n{res.stdout}\nSTDERR:\n{res.stderr}"
+    return json.loads(res.stdout.strip().splitlines()[-1])
+
+
+def _bench_channels(emit, channel_records, channels=CHANNELS):
+    for p in channels:
+        rec = _spawn_channel_child(p)
+        channel_records.append(rec)
+        emit(
+            f"engine/channels/{p}",
+            rec["bfs"]["distributed_us"],
+            f"bfs_iters={rec['bfs']['iterations']} "
+            f"pr_iters={rec['pr']['iterations']} "
+            f"agree={rec['bfs']['agreement'] and rec['pr']['agreement']} "
+            f"B/edge={rec['bfs']['stream_bytes_per_edge']}",
+        )
+
+
 def main(emit):
     records = []
     _bench_scales(emit, records)
     _bench_skew(emit, records)
-    JSON_PATH.write_text(json.dumps({"records": records}, indent=2) + "\n")
-    emit("engine/json", 0.0, f"wrote {JSON_PATH.name} ({len(records)} records)")
+    channel_records = []
+    _bench_channels(emit, channel_records)
+    assert all(
+        rec[p]["agreement"] for rec in channel_records for p in ("bfs", "pr")
+    ), channel_records
+    JSON_PATH.write_text(
+        json.dumps(
+            {"records": records, "channel_scaling": channel_records}, indent=2
+        )
+        + "\n"
+    )
+    emit(
+        "engine/json", 0.0,
+        f"wrote {JSON_PATH.name} ({len(records)} records, "
+        f"{len(channel_records)} channel points)",
+    )
 
 
 def smoke(emit):
     """Tiny-graph CI pass: exercise the fused perf path end to end, assert
-    metric keys + Pallas/XLA agreement. No timing thresholds, no JSON write."""
+    metric keys + Pallas/XLA agreement, and run ONE multi-channel point
+    through the distributed engine. No timing thresholds, no JSON write."""
     spec = dict(n=256, kind="star", hub_in_degree=700, avg_degree=2, seed=7)
     cfg = dict(p=2, l=2, lane=8, tile_vb=32, tile_eb=32)
     row = skew_record(
@@ -190,6 +309,16 @@ def smoke(emit):
         f"t_max={row['t_max']}/{row['t_max_unsplit']} "
         f"reduction={row['t_max_reduction']:.2f} agreement=ok",
     )
+    # one multi-channel point: 2 simulated channels, small graph
+    rec = _spawn_channel_child(2, extra_args=("--channel-scale", "8"))
+    for prob_key in ("bfs", "pr"):
+        for key in CHANNEL_METRIC_KEYS:
+            assert key in rec[prob_key], f"missing channel metric {key!r}"
+        assert rec[prob_key]["agreement"], rec
+    emit(
+        "engine/smoke-channels", rec["bfs"]["distributed_us"],
+        f"channels=2 bfs_iters={rec['bfs']['iterations']} agreement=ok",
+    )
 
 
 if __name__ == "__main__":
@@ -198,9 +327,17 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
                     help="tiny-graph CI pass: asserts, no timings, no JSON")
+    ap.add_argument("--channel-child", type=int, default=None, metavar="P",
+                    help="internal: one channel-sweep point (needs P forced "
+                         "host devices); prints a JSON record")
+    ap.add_argument("--channel-scale", type=int, default=10,
+                    help="log2 graph size for the channel sweep point")
     args = ap.parse_args()
 
     def _emit(name, us, detail=""):
         print(f"{name},{us:.1f},{detail}")
 
-    (smoke if args.smoke else main)(_emit)
+    if args.channel_child is not None:
+        print(json.dumps(channel_record(args.channel_child, scale=args.channel_scale)))
+    else:
+        (smoke if args.smoke else main)(_emit)

@@ -3,6 +3,9 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+# the container ships libtpu; without a platform pin jax probes the (absent)
+# TPU and multi-device collectives can hang. Honor a caller's explicit choice.
+export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 
 # repo hygiene: bytecode must never be tracked (PR 1 accidentally committed 10)
 if git ls-files | grep -E '(^|/)__pycache__/|\.pyc$'; then
@@ -13,5 +16,13 @@ fi
 python -m pytest -x -q
 
 # tiny-graph perf-path smoke: metric keys + Pallas/XLA agreement asserted
-# (no timing thresholds); full timings are `make bench-engine`.
+# (no timing thresholds) + one multi-channel distributed point; full timings
+# are `make bench-engine`.
 python -m benchmarks.bench_engine --smoke
+
+# sharded job (make check-dist): distributed engine + repro.dist suites under
+# 8 simulated memory channels — the un-skipped test_distributed /
+# test_elastic / test_fault_tolerance files plus the equivalence suite.
+XLA_FLAGS="--xla_force_host_platform_device_count=8" python -m pytest -x -q \
+    tests/test_distributed.py tests/test_distributed_equiv.py \
+    tests/test_elastic.py tests/test_fault_tolerance.py

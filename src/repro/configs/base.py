@@ -55,7 +55,7 @@ LM_SHAPES: Tuple[ShapeCell, ...] = (
             "pure full-attention arch: skippable per assignment; run anyway "
             "because DECODE against a 500k cache is O(S) per token with the "
             "sequence-parallel cache (500k PREFILL would be quadratic and is "
-            "not attempted) — see DESIGN.md §6"
+            "not attempted)"
         ),
     ),
 )

@@ -1,40 +1,74 @@
-"""Multi-device GraphScale engine: shard_map + phased all-gather crossbar.
+"""Multi-device GraphScale engine: shard_map + phased all-gather crossbar,
+streaming the COMPRESSED per-channel edge layout.
 
-Mapping (DESIGN.md §2): one mesh device per graph core / memory channel. Vertex
-labels are sharded over the ``graph`` mesh axis; at phase ``m`` every device
-contributes its active sub-interval to an ``all_gather`` — the bulk-ICI
-equivalent of the paper's two-level vertex-label crossbar — and then serves all
-of its edge label reads from that local gathered block (the scratch pad).
+Mapping (docs/distributed.md §1): one mesh device per graph core / memory
+channel. Vertex labels are sharded over the ``graph`` mesh axis; at phase
+``m`` every device contributes its active sub-interval to an ``all_gather``
+(``crossbar_exchange``) — the bulk-ICI equivalent of the paper's two-level
+vertex-label crossbar — and then serves all of its edge label reads from that
+local gathered block (the scratch pad).
 
-The engine is payload-shape agnostic: payloads may be (Vl,) scalar labels
-(BFS/WCC/SSSP/PR) or (Vl, D) feature rows (GNN message passing re-uses this
-exact code path), so the paper's technique is a first-class distributed sparse
-substrate, not a demo.
+What each channel streams is the point (docs/distributed.md §3): the
+per-device edge constants are this core's shard of the partition-time packed
+stream — ``tile_word``/``tile_word_hi`` bit-packed index words, the
+scalar-prefetched ``tile_counts`` that skip padding tiles, and the hub-split
+``split_map`` — exactly the arrays ``PartitionedGraph.channel_arrays()``
+hands the single-process engine. Phase processing is literally the same
+function (``engine.channel_phase_reduce_pallas``, the one Pallas phase-reduce
+implementation) invoked with a channel axis of 1, so every compression win
+(4-8 index B/edge, tile skipping, two-level hub reduce) crosses each
+channel's HBM unchanged; the flat (l, E_pad) src/dst/valid arrays are never
+shipped to, or materialized on, any device (jaxpr-asserted in
+tests/test_distributed_equiv.py).
 
-Numerics are bit-identical to ``core/engine.py`` (tested): the single-process
-engine is the oracle for this one.
+The engine is numerically the single-process engine run with p remote
+channels: min problems are bit-identical, sum problems (PageRank) agree to
+float reassociation (tested in tests/test_distributed_equiv.py — the
+equivalence suite that keeps this docstring honest).
 """
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
-from typing import Dict, Optional
+from typing import Dict
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core.engine import EngineOptions, _wrap, unpad_labels
-from repro.core.partition import PartitionedGraph
-from repro.core.problems import Problem
+from repro.core import jax_compat
 
-__all__ = ["crossbar_exchange", "build_distributed_run", "run_distributed"]
+jax_compat.install()  # jax.shard_map / make_mesh(axis_types) / AxisType on 0.4.x
+
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.core.engine import (  # noqa: E402
+    EngineOptions,
+    EngineResult,
+    channel_phase_reduce_pallas,
+    make_iteration,
+    phase_consts_at,
+    prepare_labels,
+    unpad_labels,
+)
+from repro.core.partition import PartitionedGraph  # noqa: E402
+from repro.core.problems import Problem  # noqa: E402
+
+__all__ = [
+    "crossbar_exchange",
+    "place_channel_shards",
+    "shard_labels",
+    "build_distributed_run",
+    "run_distributed",
+]
+
+# fixed flattening order for the packed per-channel constants (shard_map takes
+# positional args; None entries are elided per problem/partition)
+_CONST_KEYS = ("word", "word_hi", "counts", "w", "row_pos", "split_map")
 
 
 def crossbar_exchange(sub_payload: jnp.ndarray, axis: str) -> jnp.ndarray:
-    """The two-level crossbar, TPU edition: replicate the p active
-    sub-intervals so every later label read is a local (VMEM) gather.
+    """The two-level crossbar, TPU edition (docs/distributed.md §2): replicate
+    the p active sub-intervals so every later label read is a local (VMEM)
+    gather.
 
     ``sub_payload``: this device's active sub-interval, (sub, ...) floats/ints.
     Returns the gathered block (p * sub, ...).
@@ -42,63 +76,32 @@ def crossbar_exchange(sub_payload: jnp.ndarray, axis: str) -> jnp.ndarray:
     return jax.lax.all_gather(sub_payload, axis, axis=0, tiled=True)
 
 
-def _device_iteration(problem, pg, opts, axis, labels, sg, dl, vm, w):
-    """One iteration on ONE device's shard. labels fields: (Vl,) or scalar."""
-    sub_size, l, vpc = pg.sub_size, pg.l, pg.vertices_per_core
-    is_min = problem.reduce_kind == "min"
+def place_channel_shards(
+    problem: Problem, pg: PartitionedGraph, mesh: Mesh, axis: str = "graph"
+) -> Dict[str, jnp.ndarray]:
+    """NamedSharding-place the packed per-channel edge stream: the core axis
+    of every ``channel_arrays()`` entry becomes the ``axis`` mesh axis, so
+    device q holds exactly core q's compressed shard (ragged R/T already
+    padded uniform at partition time; the weight-streaming rule lives in
+    ``channel_arrays`` itself)."""
+    arrs = pg.channel_arrays(problem)
+    out = {}
+    for k, v in arrs.items():
+        if v is None:
+            out[k] = None
+        else:
+            spec = P(axis, *([None] * (v.ndim - 1)))
+            out[k] = jax.device_put(jnp.asarray(v), NamedSharding(mesh, spec))
+    return out
 
-    def phase_reduce(m, labels):
-        payload = problem.src_transform(labels)  # (Vl, ...) elementwise
-        sub = jax.lax.dynamic_slice_in_dim(payload, m * sub_size, sub_size, axis=0)
-        gathered = crossbar_exchange(sub, axis)  # (p*sub, ...)
-        sg_m = jax.lax.dynamic_index_in_dim(sg, m, axis=0, keepdims=False)  # (E,)
-        dl_m = jax.lax.dynamic_index_in_dim(dl, m, axis=0, keepdims=False)
-        vm_m = jax.lax.dynamic_index_in_dim(vm, m, axis=0, keepdims=False)
-        w_m = (
-            jax.lax.dynamic_index_in_dim(w, m, axis=0, keepdims=False)
-            if w is not None
-            else None
-        )
-        svals = jnp.take(gathered, sg_m, axis=0)  # (E, ...) scratch-pad reads
-        contrib = problem.edge_map(svals, w_m)
-        identity = jnp.asarray(problem.identity, dtype=contrib.dtype)
-        mask = vm_m.reshape(vm_m.shape + (1,) * (contrib.ndim - 1))
-        contrib = jnp.where(mask, contrib, identity)
-        if is_min:
-            return jax.ops.segment_min(
-                contrib, dl_m, num_segments=vpc, indices_are_sorted=True
-            )
-        return jax.ops.segment_sum(
-            contrib, dl_m, num_segments=vpc, indices_are_sorted=True
-        )
 
-    if is_min and opts.immediate_updates:
-
-        def phase(m, labels):
-            reduced = phase_reduce(m, labels)
-            lab = labels[problem.merge_field]
-            new = dict(labels)
-            new[problem.merge_field] = jnp.minimum(lab, reduced.astype(lab.dtype))
-            return new
-
-        return jax.lax.fori_loop(0, l, phase, labels)
-
-    lab = labels[problem.merge_field]
-    acc_dtype = jnp.float32 if problem.reduce_kind == "sum" else lab.dtype
-    acc0 = jnp.full(lab.shape, problem.identity, dtype=acc_dtype)
-
-    def phase(m, acc):
-        reduced = phase_reduce(m, labels)
-        if is_min:
-            return jnp.minimum(acc, reduced.astype(acc.dtype))
-        return acc + reduced.astype(acc.dtype)
-
-    acc = jax.lax.fori_loop(0, l, phase, acc0)
-    if is_min:
-        new = dict(labels)
-        new[problem.merge_field] = jnp.minimum(lab, acc.astype(lab.dtype))
-        return new
-    return problem.finalize(labels, acc)
+def _label_specs(labels, axis):
+    # read ndim off the value itself (works for np/jnp arrays AND tracers —
+    # jax.make_jaxpr traces through run_fn.traceable; np.asarray would throw)
+    return {
+        k: (P(axis) if getattr(v, "ndim", 0) >= 1 else P())
+        for k, v in labels.items()
+    }
 
 
 def build_distributed_run(
@@ -109,13 +112,43 @@ def build_distributed_run(
     opts: EngineOptions = EngineOptions(),
 ):
     """Returns run_fn(labels) -> (labels, iters, changed); labels pre-sharded
-    over ``axis``."""
+    over ``axis``. ``run_fn.traceable`` is the un-jitted composite (constants
+    bound) for jaxpr inspection by the equivalence suite."""
+    if opts.backend != "pallas":
+        raise ValueError(
+            "run_distributed streams the compressed per-channel layout and "
+            "has exactly one phase-reduce implementation — the Pallas one; "
+            f"backend={opts.backend!r} has no distributed variant (run the "
+            "XLA oracle through core.engine.run instead)"
+        )
+    consts = place_channel_shards(problem, pg, mesh, axis)  # raises if no tiles
+    const_keys = tuple(k for k in _CONST_KEYS if consts[k] is not None)
+    const_vals = tuple(consts[k] for k in const_keys)
+    sub_size = pg.sub_size
 
-    def body(labels, sg, dl, vm, w):
-        # shard_map blocks: leading p-dim of size 1 on each device -> squeeze
-        labels = {k: (v[0] if getattr(v, "ndim", 0) >= 1 and v.shape[0] == 1 else v) for k, v in labels.items()}
-        sg, dl, vm = sg[0], dl[0], vm[0]
-        w = w[0] if w is not None else None
+    def body(labels, *cvals):
+        # shard_map blocks keep a leading core dim of size 1 -> squeeze labels
+        # to this device's (Vl,) shard; the packed constants KEEP theirs (the
+        # channel phase reduce runs the (n=1, R, T) kernel grid directly).
+        labels = {
+            k: (v[0] if getattr(v, "ndim", 0) >= 1 and v.shape[0] == 1 else v)
+            for k, v in labels.items()
+        }
+        cm_all = dict(zip(const_keys, cvals))
+        cm_all.update({k: None for k in _CONST_KEYS if k not in const_keys})
+
+        def reduce_at_phase(m, labels_local):
+            payload = problem.src_transform(labels_local)  # (Vl,) elementwise
+            sub = jax.lax.dynamic_slice_in_dim(
+                payload, m * sub_size, sub_size, axis=0
+            )
+            gathered = crossbar_exchange(sub, axis)  # (G,) scratch pad
+            reduced = channel_phase_reduce_pallas(
+                problem, pg, gathered, phase_consts_at(cm_all, m), opts
+            )  # (1, Vl)
+            return reduced[0]
+
+        iteration = make_iteration(problem, pg, opts, reduce_at_phase)
 
         def cond(carry):
             _, it, changed = carry
@@ -123,7 +156,7 @@ def build_distributed_run(
 
         def step(carry):
             labels, it, _ = carry
-            new = _device_iteration(problem, pg, opts, axis, labels, sg, dl, vm, w)
+            new = iteration(labels)
             local_changed = problem.not_converged(labels, new)
             changed = (
                 jax.lax.psum(local_changed.astype(jnp.int32), axis) > 0
@@ -133,38 +166,52 @@ def build_distributed_run(
         labels, iters, changed = jax.lax.while_loop(
             cond, step, (labels, jnp.int32(0), jnp.bool_(True))
         )
-        labels = {k: (v[None] if getattr(v, "ndim", 0) >= 1 and v.shape[0] == pg.vertices_per_core else v) for k, v in labels.items()}
+        labels = {
+            k: (
+                v[None]
+                if getattr(v, "ndim", 0) >= 1 and v.shape[0] == pg.vertices_per_core
+                else v
+            )
+            for k, v in labels.items()
+        }
         return labels, iters, changed
 
-    label_spec = lambda v: P(axis) if v.ndim >= 1 else P()  # noqa: E731
-    edge_spec = P(axis, None, None)
-
-    def make_specs(labels, has_w):
+    def make_fn(labels):
         in_specs = (
-            {k: label_spec(np.asarray(v)) for k, v in labels.items()},
-            edge_spec,
-            edge_spec,
-            edge_spec,
-            edge_spec if has_w else None,
+            _label_specs(labels, axis),
+            *(P(axis, *([None] * (v.ndim - 1))) for v in const_vals),
         )
-        out_specs = (
-            {k: label_spec(np.asarray(v)) for k, v in labels.items()},
-            P(),
-            P(),
+        out_specs = (_label_specs(labels, axis), P(), P())
+        return jax.shard_map(
+            body, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=False
         )
-        return in_specs, out_specs
+
+    # jit once per label-tree structure: a fresh jax.jit around a fresh
+    # shard_map closure on every call would retrace + recompile every time
+    # (caught because the channel-scaling bench timed compiles, not steps)
+    jitted: dict = {}
 
     def run_fn(labels):
-        has_w = pg.weights is not None
-        in_specs, out_specs = make_specs(labels, has_w)
-        fn = jax.shard_map(body, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=False)
-        sg = jnp.asarray(pg.src_gidx)
-        dl = jnp.asarray(pg.dst_lidx)
-        vm = jnp.asarray(pg.valid)
-        w = jnp.asarray(pg.weights) if has_w else None
-        return jax.jit(fn)(labels, sg, dl, vm, w)
+        key = tuple(sorted((k, getattr(v, "ndim", 0)) for k, v in labels.items()))
+        fn = jitted.get(key)
+        if fn is None:
+            fn = jitted[key] = jax.jit(make_fn(labels))
+        return fn(labels, *const_vals)
 
+    run_fn.traceable = lambda labels: make_fn(labels)(labels, *const_vals)
+    run_fn.const_keys = const_keys
     return run_fn
+
+
+def shard_labels(labels: Dict, mesh: Mesh, axis: str = "graph") -> Dict:
+    """device_put a prepare_labels() dict over the mesh: core axis of every
+    (p, Vl) array -> the ``axis`` mesh axis, scalars replicated."""
+    return {
+        k: jax.device_put(
+            v, NamedSharding(mesh, P(axis) if getattr(v, "ndim", 0) >= 1 else P())
+        )
+        for k, v in labels.items()
+    }
 
 
 def run_distributed(
@@ -174,20 +221,12 @@ def run_distributed(
     mesh: Mesh,
     axis: str = "graph",
     opts: EngineOptions = EngineOptions(),
-):
+) -> EngineResult:
     """Convenience end-to-end: init labels, shard, run, unpad."""
-    from repro.core.engine import prepare_labels
-
     assert pg.p == mesh.shape[axis], (pg.p, dict(mesh.shape))
-    labels = prepare_labels(problem, g, pg)  # dict of (p, Vl) + scalars
-    sharded = {}
-    for k, v in labels.items():
-        spec = P(axis) if getattr(v, "ndim", 0) >= 1 else P()
-        sharded[k] = jax.device_put(v, NamedSharding(mesh, spec))
+    sharded = shard_labels(prepare_labels(problem, g, pg), mesh, axis)
     run_fn = build_distributed_run(problem, pg, mesh, axis, opts)
     out, iters, changed = run_fn(sharded)
-    from repro.core.engine import EngineResult
-
     return EngineResult(
         labels=unpad_labels({k: np.asarray(v) for k, v in out.items()}, pg),
         iterations=int(iters),

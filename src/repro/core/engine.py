@@ -60,7 +60,16 @@ import numpy as np
 from repro.core.partition import PartitionedGraph
 from repro.core.problems import Problem
 
-__all__ = ["EngineOptions", "EngineResult", "prepare_labels", "run", "unpad_labels"]
+__all__ = [
+    "EngineOptions",
+    "EngineResult",
+    "prepare_labels",
+    "run",
+    "unpad_labels",
+    "make_iteration",
+    "channel_phase_reduce_pallas",
+    "channel_phase_reduce_xla",
+]
 
 
 _BACKENDS = ("pallas", "xla")
@@ -146,34 +155,15 @@ def _edge_constants(problem: Problem, pg: PartitionedGraph, opts: EngineOptions)
     """Device-array edge constants, converted ONCE (hoisted out of the traced
     phase body — ``jnp.asarray`` on host numpy used to run inside it)."""
     if opts.backend == "pallas":
-        if pg.tile_word is None:
-            raise ValueError(
-                "backend='pallas' needs the partition-time packed edge stream; "
-                "re-partition with partition_2d (tile_* fields are None)"
-            )
-        # weightless edge_op='add' streams NO weight array at all: the kernel
-        # adds a constant 1.0 in registers (used to allocate a full-tile-shape
-        # jnp.ones on every call here).
-        w = (
-            jnp.asarray(pg.tile_weights)
-            if problem.edge_op == "add" and pg.tile_weights is not None
-            else None
-        )
+        # channel_arrays(problem) is the single source of truth for the packed
+        # stream layout (word/word_hi/counts/w/row_pos/split_map with a
+        # leading core == channel axis) AND the weight-streaming rule; the
+        # distributed engine NamedSharding-places the same dict over the mesh.
+        # Weightless edge_op streams NO weight array at all: the kernel adds
+        # a constant 1.0 in registers.
+        arrs = pg.channel_arrays(problem)
         return {
-            "word": jnp.asarray(pg.tile_word),  # (p, l, R, T, Eb) packed
-            "word_hi": jnp.asarray(pg.tile_word_hi)
-            if pg.tile_word_hi is not None
-            else None,
-            "counts": jnp.asarray(pg.tile_counts),  # (p, l, R)
-            "w": w,
-            "row_pos": jnp.asarray(pg.tile_row_pos)
-            if pg.tile_row_pos is not None
-            else None,  # (p, l, Vl)
-            # hub-row splitting: virtual-row partials -> natural rows, merged
-            # with the problem's OWN reduce op + identity (level-2 reduce).
-            "split_map": jnp.asarray(pg.tile_split_map)
-            if pg.tile_split_map is not None
-            else None,  # (p, l, Vl, S_max), -1 pad
+            k: (jnp.asarray(v) if v is not None else None) for k, v in arrs.items()
         }
     w = jnp.asarray(pg.weights) if pg.weights is not None else None
     return {
@@ -184,38 +174,46 @@ def _edge_constants(problem: Problem, pg: PartitionedGraph, opts: EngineOptions)
     }
 
 
-def _phase_reduce_pallas(problem, pg, consts, labels, m, opts):
-    """Steps 1+2, fused: prefetch the crossbar block, then ONE pallas_call
-    over grid (p, R, T) does unpack + gather + map UDF + segment reduce for
-    all cores, reading the compressed word stream and skipping padding tiles.
-    No (p, E_pad) per-edge array is materialized. With hub-row splitting the
-    kernel output is over VIRTUAL rows and a second-level combine folds the
-    partials into natural rows (still no per-edge materialization)."""
+def phase_consts_at(consts, m):
+    """Slice phase ``m`` out of every packed edge constant (axis 1 = phase).
+
+    Works for both layouts of the leading channel axis: the single-process
+    engine's full (p, l, ...) stack and a distributed device's (1, l, ...)
+    shard — phase slicing is channel-local either way."""
+    return {
+        k: (
+            jax.lax.dynamic_index_in_dim(v, m, axis=1, keepdims=False)
+            if v is not None
+            else None
+        )
+        for k, v in consts.items()
+    }
+
+
+def channel_phase_reduce_pallas(problem, pg, gathered, cm, opts):
+    """THE fused gather-map-reduce primitive (steps 1+2 of a phase), channel
+    local: ONE ``pallas_call`` over grid (n, R, T) does unpack + gather + map
+    UDF + segment reduce against the phase's gathered crossbar block, reading
+    the compressed word stream and skipping padding tiles. ``n`` is whatever
+    the caller's channel axis holds — all ``p`` cores in the single-process
+    engine, exactly 1 on a distributed device (one core per memory channel) —
+    so both engines execute this one implementation.
+
+    ``gathered`` is the (G,) crossbar block (locally sliced in-process;
+    ``crossbar_exchange``-all-gathered across devices). ``cm`` is a phase
+    slice of the packed constants (``phase_consts_at``). No (n, E_pad)
+    per-edge array is materialized. With hub-row splitting the kernel output
+    is over VIRTUAL rows and the second-level combine folds the partials into
+    natural rows (still no per-edge materialization). Returns (n, Vl)."""
     from repro.kernels.csr_gather_reduce.kernel import gather_reduce_cores_pallas
     from repro.kernels.csr_gather_reduce.ops import combine_split_rows
 
-    payload = problem.src_transform(labels)  # (p, Vl) elementwise
-    sub = jax.lax.dynamic_slice_in_dim(payload, m * pg.sub_size, pg.sub_size, axis=1)
-    gathered = sub.reshape(pg.gathered_size)  # (G,) scratch pads
-
-    word = jax.lax.dynamic_index_in_dim(consts["word"], m, axis=1, keepdims=False)
-    hi = (
-        jax.lax.dynamic_index_in_dim(consts["word_hi"], m, axis=1, keepdims=False)
-        if consts["word_hi"] is not None
-        else None
-    )
-    counts = jax.lax.dynamic_index_in_dim(consts["counts"], m, axis=1, keepdims=False)
-    w = (
-        jax.lax.dynamic_index_in_dim(consts["w"], m, axis=1, keepdims=False)
-        if consts["w"] is not None
-        else None
-    )
     reduced = gather_reduce_cores_pallas(
         gathered,
-        word,
-        counts,
-        hi,
-        w,
+        cm["word"],
+        cm["counts"],
+        cm["word_hi"],
+        cm["w"],
         num_rows=pg.packed_rows_per_core,
         vb=pg.tile_vb,
         src_bits=pg.src_bits,
@@ -223,61 +221,87 @@ def _phase_reduce_pallas(problem, pg, consts, labels, m, opts):
         edge_op=problem.edge_op,
         identity=problem.identity,
         interpret=opts.kernel_interpret,
-    )  # (p, R*vb) level-1 reductions in packed (virtual-)row space
-    if consts["split_map"] is not None:
+    )  # (n, R*vb) level-1 reductions in packed (virtual-)row space
+    if cm["split_map"] is not None:
         # level-2 reduce (hub-row splitting): fold each natural row's
         # virtual-row partials with the problem's reduce op; -1 padding
         # contributes the problem's identity, never a stray 0.
-        sm = jax.lax.dynamic_index_in_dim(
-            consts["split_map"], m, axis=1, keepdims=False
-        )  # (p, Vl, S)
         reduced = combine_split_rows(
-            reduced, sm, kind=problem.reduce_kind, identity=problem.identity
+            reduced, cm["split_map"], kind=problem.reduce_kind,
+            identity=problem.identity,
         )
-    elif consts["row_pos"] is not None:  # undo degree-aware row packing
-        rp = jax.lax.dynamic_index_in_dim(consts["row_pos"], m, axis=1, keepdims=False)
-        reduced = jnp.take_along_axis(reduced, rp, axis=1)
+    elif cm["row_pos"] is not None:  # undo degree-aware row packing
+        reduced = jnp.take_along_axis(reduced, cm["row_pos"], axis=1)
     return reduced
 
 
-def _phase_reduce_xla(problem, pg, consts, labels, m, opts):
-    """Steps 1+2, oracle: materialize (p, E_pad) contributions, then reduce."""
-    payload = problem.src_transform(labels)  # (p, Vl) elementwise
-    sub = jax.lax.dynamic_slice_in_dim(payload, m * pg.sub_size, pg.sub_size, axis=1)
-    gathered = sub.reshape(pg.gathered_size)
-
-    sg = jax.lax.dynamic_index_in_dim(consts["src"], m, axis=1, keepdims=False)
-    dl = jax.lax.dynamic_index_in_dim(consts["dst"], m, axis=1, keepdims=False)
-    vm = jax.lax.dynamic_index_in_dim(consts["valid"], m, axis=1, keepdims=False)
-    w = (
-        jax.lax.dynamic_index_in_dim(consts["w"], m, axis=1, keepdims=False)
-        if consts["w"] is not None
-        else None
-    )
-
-    svals = jnp.take(gathered, sg, axis=0)  # (p, E) crossbar label reads
-    contrib = problem.edge_map(svals, w)
+def channel_phase_reduce_xla(problem, pg, gathered, cm, opts):
+    """Oracle form of the channel-local phase reduce: materialize (n, E_pad)
+    contributions via take/where, then segment-reduce. ``cm`` holds the flat
+    (n, E_pad) src/dst/valid slices of one phase."""
+    svals = jnp.take(gathered, cm["src"], axis=0)  # (n, E) crossbar label reads
+    contrib = problem.edge_map(svals, cm["w"])
     identity = jnp.asarray(problem.identity, dtype=contrib.dtype)
-    contrib = jnp.where(vm, contrib, identity)
+    contrib = jnp.where(cm["valid"], contrib, identity)
     return jax.vmap(
         lambda c, d: _segment_reduce(
             problem.reduce_kind, c, d, pg.vertices_per_core, identity
         )
-    )(contrib, dl)  # (p, Vl)
+    )(contrib, cm["dst"])  # (n, Vl)
 
 
-def _make_iteration(problem: Problem, pg: PartitionedGraph, opts: EngineOptions):
-    is_min = problem.reduce_kind == "min"
-    consts = _edge_constants(problem, pg, opts)
-    reduce_fn = (
-        _phase_reduce_pallas if opts.backend == "pallas" else _phase_reduce_xla
+def _gather_local(problem, pg, labels, m):
+    """Single-process crossbar: every core's phase-m sub-interval is a local
+    slice of the (p, Vl) payload — concatenating them IS the gathered block."""
+    payload = problem.src_transform(labels)  # (p, Vl) elementwise
+    sub = jax.lax.dynamic_slice_in_dim(payload, m * pg.sub_size, pg.sub_size, axis=1)
+    return sub.reshape(pg.gathered_size)  # (G,) scratch pads
+
+
+def _phase_reduce_pallas(problem, pg, consts, labels, m, opts):
+    gathered = _gather_local(problem, pg, labels, m)
+    return channel_phase_reduce_pallas(
+        problem, pg, gathered, phase_consts_at(consts, m), opts
     )
+
+
+def _phase_reduce_xla(problem, pg, consts, labels, m, opts):
+    gathered = _gather_local(problem, pg, labels, m)
+    return channel_phase_reduce_xla(
+        problem, pg, gathered, phase_consts_at(consts, m), opts
+    )
+
+
+def make_iteration(
+    problem: Problem,
+    pg: PartitionedGraph,
+    opts: EngineOptions,
+    reduce_at_phase=None,
+):
+    """Build one engine iteration (the l-phase loop + apply semantics).
+
+    ``reduce_at_phase(m, labels) -> reduced`` supplies steps 1+2 of phase m;
+    ``reduced`` must match ``labels[merge_field]``'s shape. When None (the
+    single-process engine) it is built from the packed edge constants and the
+    backend's channel phase reduce. The distributed engine passes its own —
+    crossbar all-gather + the SAME ``channel_phase_reduce_pallas`` on a
+    one-channel shard — so apply semantics (async min merge vs synchronous
+    accumulate + finalize) exist exactly once."""
+    is_min = problem.reduce_kind == "min"
+    if reduce_at_phase is None:
+        consts = _edge_constants(problem, pg, opts)
+        reduce_fn = (
+            _phase_reduce_pallas if opts.backend == "pallas" else _phase_reduce_xla
+        )
+
+        def reduce_at_phase(m, labels):
+            return reduce_fn(problem, pg, consts, labels, m, opts)
 
     if is_min and opts.immediate_updates:
 
         def iteration(labels):
             def phase(m, labels):
-                reduced = reduce_fn(problem, pg, consts, labels, m, opts)
+                reduced = reduce_at_phase(m, labels)
                 lab = labels[problem.merge_field]
                 merged = jnp.minimum(lab, reduced.astype(lab.dtype))
                 new = dict(labels)
@@ -295,7 +319,7 @@ def _make_iteration(problem: Problem, pg: PartitionedGraph, opts: EngineOptions)
         acc0 = jnp.full(lab.shape, problem.identity, dtype=acc_dtype)
 
         def phase(m, acc):
-            reduced = reduce_fn(problem, pg, consts, labels, m, opts)
+            reduced = reduce_at_phase(m, labels)
             if problem.reduce_kind == "min":
                 return jnp.minimum(acc, reduced.astype(acc.dtype))
             return acc + reduced.astype(acc.dtype)
@@ -308,6 +332,10 @@ def _make_iteration(problem: Problem, pg: PartitionedGraph, opts: EngineOptions)
         return problem.finalize(labels, acc)
 
     return iteration
+
+
+# the historical private name (tests and callers predate the public API)
+_make_iteration = make_iteration
 
 
 @partial(jax.jit, static_argnames=("problem", "pg", "opts"))

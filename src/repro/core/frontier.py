@@ -1,4 +1,4 @@
-"""Frontier-compressed crossbar exchange (beyond-paper, DESIGN.md §7.1).
+"""Frontier-compressed crossbar exchange (beyond-paper, docs/distributed.md §5).
 
 The paper's crossbar always moves full label requests. For monotone
 min-problems (BFS/WCC/SSSP) the set of labels that changed since a core last
@@ -24,9 +24,19 @@ from typing import Dict, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core.engine import EngineOptions, prepare_labels, unpad_labels, EngineResult
+from repro.core import jax_compat
+
+jax_compat.install()  # jax.shard_map on 0.4.x
+
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.core.engine import (  # noqa: E402
+    EngineOptions,
+    EngineResult,
+    prepare_labels,
+    unpad_labels,
+)
 from repro.core.partition import PartitionedGraph
 from repro.core.problems import Problem
 

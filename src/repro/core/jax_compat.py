@@ -1,0 +1,85 @@
+"""Forward-port the jax >= 0.6 multi-device API onto jax 0.4.x.
+
+The distributed engine, ``repro.dist``, and their tests are written against
+the modern public surface — ``jax.shard_map`` (with ``check_vma``),
+``jax.make_mesh(..., axis_types=...)``, ``jax.sharding.AxisType`` — while this
+container ships jax 0.4.37, where the same machinery lives under
+``jax.experimental.shard_map.shard_map`` (with ``check_rep``) and
+``jax.make_mesh`` takes no ``axis_types``. Rather than forking every call
+site, ``install()`` grafts thin adapters onto the ``jax`` namespace once, so
+one codebase runs unmodified on both versions:
+
+  * ``jax.shard_map``          -> experimental shard_map; ``check_vma`` maps to
+                                  ``check_rep`` (same meaning: replication /
+                                  varying-manual-axes checking).
+  * ``jax.make_mesh``          -> wrapped to swallow ``axis_types`` (0.4.x
+                                  meshes are implicitly Auto on every axis,
+                                  which is exactly what the callers request).
+  * ``jax.sharding.AxisType``  -> a stand-in enum with ``Auto`` / ``Explicit``
+                                  members (only ever passed through to
+                                  ``make_mesh``, never inspected).
+
+On a modern jax every attribute already exists and ``install()`` is a no-op —
+the adapters never shadow a real API. Imported (and installed) by
+``repro.core.distributed``, ``repro.core.frontier``, ``repro.launch.mesh``,
+and ``repro.dist``; import order therefore never matters for library code.
+Scripts that call ``jax.make_mesh`` before importing any repro module must
+import one of those first (the tests do).
+"""
+from __future__ import annotations
+
+import enum
+import functools
+
+import jax
+
+__all__ = ["install"]
+
+
+class _AxisType(enum.Enum):
+    """Stand-in for jax.sharding.AxisType on 0.4.x (Auto/Explicit/Manual)."""
+
+    Auto = "auto"
+    Explicit = "explicit"
+    Manual = "manual"
+
+
+def _make_shard_map():
+    from jax.experimental.shard_map import shard_map as _legacy_shard_map
+
+    @functools.wraps(_legacy_shard_map)
+    def shard_map(f, mesh=None, in_specs=None, out_specs=None, **kwargs):
+        # modern name -> legacy name; both toggle the replication checker
+        if "check_vma" in kwargs:
+            kwargs["check_rep"] = kwargs.pop("check_vma")
+        return _legacy_shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kwargs
+        )
+
+    return shard_map
+
+
+def _wrap_make_mesh(real_make_mesh):
+    @functools.wraps(real_make_mesh)
+    def make_mesh(axis_shapes, axis_names, *, axis_types=None, **kwargs):
+        # 0.4.x meshes have no axis types (everything is Auto) — drop them.
+        return real_make_mesh(axis_shapes, axis_names, **kwargs)
+
+    make_mesh._repro_compat = True
+    return make_mesh
+
+
+def install() -> None:
+    """Idempotently install the modern-API adapters. No-op on jax >= 0.6."""
+    if not hasattr(jax, "shard_map"):
+        jax.shard_map = _make_shard_map()
+    if not hasattr(jax.sharding, "AxisType"):
+        jax.sharding.AxisType = _AxisType
+        # make_mesh exists on 0.4.37 but rejects axis_types; wrap it so call
+        # sites written for the modern signature work. Only wrap when AxisType
+        # itself was missing (i.e. we are definitely on the legacy API).
+        if not getattr(jax.make_mesh, "_repro_compat", False):
+            jax.make_mesh = _wrap_make_mesh(jax.make_mesh)
+
+
+install()

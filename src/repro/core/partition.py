@@ -200,6 +200,42 @@ class PartitionedGraph:
         total = self.p * self.l * self.vertices_per_core
         return self.split_rows / max(total, 1)
 
+    def channel_arrays(self, problem=None) -> dict:
+        """The per-channel COMPRESSED edge stream, keyed for the engines.
+
+        Every array's leading axis is the core axis — one graph core == one
+        memory channel == one mesh device (docs/distributed.md) — and
+        ``stack_packed_tiles`` already padded the per-bucket ragged (R, T)
+        to the max over ALL (core, phase) buckets, so slice ``[q]`` is core
+        q's complete, uniformly-shaped channel shard: the distributed engine
+        ``NamedSharding``-places these over the ``graph`` mesh axis and each
+        device streams exactly its own packed words + tile counts (never the
+        flat (l, E_pad) src/dst/valid arrays). Keys match the engine's packed
+        edge-constant dict (``word``/``word_hi``/``counts``/``w``/
+        ``row_pos``/``split_map``; absent components are None).
+
+        ``problem``: when given, the weight stream is dropped unless the
+        problem's map UDF consumes it (``edge_op == 'add'``) — the kernel
+        then adds unit weight in registers. This is THE weight-streaming
+        rule; both engines get it from here so they cannot drift.
+        """
+        if self.tile_word is None:
+            raise ValueError(
+                "packed edge stream not built; re-partition with "
+                "PartitionConfig(build_tiles=True)"
+            )
+        arrs = {
+            "word": self.tile_word,  # (p, l, R, T, Eb) int32 packed
+            "word_hi": self.tile_word_hi,  # (p, l, R, T, Eb) | None
+            "counts": self.tile_counts,  # (p, l, R)
+            "w": self.tile_weights,  # (p, l, R, T, Eb) f32 | None
+            "row_pos": self.tile_row_pos,  # (p, l, Vl) | None
+            "split_map": self.tile_split_map,  # (p, l, Vl, S_max) | None
+        }
+        if problem is not None and problem.edge_op != "add":
+            arrs["w"] = None
+        return arrs
+
     @property
     def t_max_reduction(self) -> float:
         """Stacked-stream T_max as a fraction of what the UNSPLIT layout

@@ -1,0 +1,39 @@
+"""``repro.dist`` — the multi-device production subsystem.
+
+The GraphScale engines (``core.engine`` / ``core.distributed``) are the graph
+substrate; this package is everything around them that turns a kernel demo
+into a servable system (docs/distributed.md):
+
+  * ``sharding``        — mesh axis roles + parameter/batch/cache
+                          PartitionSpec trees for the LM / GNN / RecSys
+                          families (consumed by ``launch.cells``).
+  * ``embedding``       — the vertex-label crossbar generalized to embedding
+                          rows: capacity-bounded all_to_all request/response
+                          lookup across table shards.
+  * ``compression``     — int8 / top-k gradient compression with error
+                          feedback for slow-axis data parallelism.
+  * ``gnn_parallel``    — feature-row aggregation over the 2-D-partitioned
+                          crossbar engine (GNN message passing).
+  * ``gat_parallel``    — a full GAT loss lowered onto the dst-partitioned
+                          layout (one payload all-gather per layer).
+  * ``checkpoint``      — atomic, checksummed, mesh-elastic checkpoints.
+  * ``fault_tolerance`` — checkpoint policy + retry/recovery loop + straggler
+                          monitor.
+
+Importing the package installs the jax >= 0.6 API adapters
+(``repro.core.jax_compat``): ``jax.shard_map``, ``jax.make_mesh(axis_types)``,
+and ``jax.sharding.AxisType`` all work on the container's jax 0.4.x.
+"""
+from repro.core import jax_compat
+
+jax_compat.install()
+
+__all__ = [
+    "sharding",
+    "embedding",
+    "compression",
+    "gnn_parallel",
+    "gat_parallel",
+    "checkpoint",
+    "fault_tolerance",
+]

@@ -1,0 +1,102 @@
+"""Preemption-safe training loop: checkpoint policy + retry + straggler
+monitor (docs/distributed.md §7).
+
+``run_with_recovery`` is the production driver contract: a deterministic
+``step_fn(state, i)`` (the data cursor is a pure function of ``i``, as the
+synthetic pipelines guarantee) resumed from the newest checkpoint produces
+EXACTLY the state an uninterrupted run would (tests/test_fault_tolerance.py
+asserts this bitwise, including a full PageRank engine run).
+"""
+from __future__ import annotations
+
+import dataclasses
+import statistics
+import time
+from typing import Any, Callable, Dict, Optional, Tuple
+
+from repro.dist.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+
+__all__ = ["CheckpointPolicy", "StepMonitor", "run_with_recovery"]
+
+
+@dataclasses.dataclass(frozen=True)
+class CheckpointPolicy:
+    directory: str
+    every_steps: int = 100  # save after steps i with (i+1) % every == 0
+    keep: int = 3  # newest checkpoints retained
+    max_retries: int = 3  # per-step retries on a raised (transient) failure
+    retry_backoff_s: float = 0.0
+
+
+class StepMonitor:
+    """Flags straggler steps: duration > deadline_factor * running median.
+    The first ``min_history`` steps are never flagged (no baseline yet)."""
+
+    def __init__(self, deadline_factor: float = 3.0, min_history: int = 3):
+        self.deadline_factor = deadline_factor
+        self.min_history = min_history
+        self._durations: list = []
+        self._stragglers = 0
+
+    def record(self, step: int, duration_s: float) -> bool:
+        flagged = False
+        if len(self._durations) >= self.min_history:
+            med = statistics.median(self._durations)
+            flagged = duration_s > self.deadline_factor * med
+        self._durations.append(duration_s)
+        self._stragglers += int(flagged)
+        return flagged
+
+    def summary(self) -> Dict[str, Any]:
+        return {
+            "steps": len(self._durations),
+            "stragglers": self._stragglers,
+            "median_s": statistics.median(self._durations) if self._durations else 0.0,
+        }
+
+
+def run_with_recovery(
+    step_fn: Callable[[Any, int], Tuple[Any, dict]],
+    init_state: Callable[[], Any],
+    total_steps: int,
+    policy: CheckpointPolicy,
+    monitor: Optional[StepMonitor] = None,
+) -> Tuple[Any, dict]:
+    """Run ``step_fn`` for steps [resume_point, total_steps).
+
+    Resume: if ``policy.directory`` holds a checkpoint, restore it (template
+    from ``init_state()``) and continue from its ``next_step``. Transient
+    step failures retry up to ``policy.max_retries`` times with the SAME
+    (state, i) — safe because a failed step never committed its state.
+    Returns ``(final_state, last_metrics)``.
+    """
+    last = latest_step(policy.directory)
+    if last is not None:
+        state, meta = restore_checkpoint(policy.directory, init_state(), step=last)
+        start = int(meta.get("next_step", last))
+    else:
+        state = init_state()
+        start = 0
+    metrics: dict = {}
+    for i in range(start, total_steps):
+        t0 = time.perf_counter()
+        for attempt in range(policy.max_retries + 1):
+            try:
+                state, metrics = step_fn(state, i)
+                break
+            except Exception:
+                if attempt >= policy.max_retries:
+                    raise
+                if policy.retry_backoff_s:
+                    time.sleep(policy.retry_backoff_s * (attempt + 1))
+        if monitor is not None:
+            monitor.record(i, time.perf_counter() - t0)
+        if policy.every_steps and (i + 1) % policy.every_steps == 0:
+            save_checkpoint(
+                policy.directory,
+                i + 1,
+                state,
+                meta={"next_step": i + 1},
+                keep=policy.keep,
+            )
+    return state, metrics

@@ -1,0 +1,129 @@
+"""GAT on the GraphScale dst-partitioned layout (docs/distributed.md §4;
+hillclimb cell C).
+
+The dense baseline replicates full (V, H*hd) node tensors and lets GSPMD
+all-reduce them everywhere. This variant lowers the SAME training math onto
+the paper's layout: vertices dst-partitioned over the mesh (l = 1 — the
+whole interval fits the scratch pad), ONE all-gather of the projected
+payload (xp ++ per-head src attention scores) per layer, and everything
+downstream — attention softmax, message aggregation, loss — is local to the
+destination's device because every in-edge of a vertex lives in its core's
+bucket.
+
+Numerics match the dense single-device GAT to f32 tolerance (tested in
+tests/test_distributed.py); ``wire_dtype`` optionally narrows the exchanged
+payload (bf16 wires, f32 math).
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import jax_compat
+
+jax_compat.install()
+
+from jax.sharding import PartitionSpec as P  # noqa: E402
+
+from repro.models.gnn.common import mlp, segment_softmax_xla  # noqa: E402
+
+__all__ = ["make_gat_graphscale_loss"]
+
+
+def _gat_layer_dist(w, a_src, a_dst, x, e_src, e_dst, e_val, axis, final, wire_dtype):
+    """One distributed GAT layer on this device's (Vl, ...) shard. ``e_src``
+    indexes the gathered payload (crossbar-routed gathered ids), ``e_dst``
+    the local interval."""
+    vl = x.shape[0]
+    xp = jnp.einsum("nd,dhf->nhf", x, w)  # (Vl, H, hd)
+    s_src = (xp * a_src[None]).sum(-1)  # (Vl, H)
+    s_dst = (xp * a_dst[None]).sum(-1)
+    h, hd = xp.shape[1], xp.shape[2]
+
+    # the layer's ONE exchange: projected rows ++ src attention scores
+    payload = jnp.concatenate([xp.reshape(vl, h * hd), s_src], axis=-1)
+    if wire_dtype is not None:
+        payload = payload.astype(wire_dtype)
+    gathered = jax.lax.all_gather(payload, axis, axis=0, tiled=True)
+    gathered = gathered.astype(x.dtype)
+    xp_g = gathered[:, : h * hd].reshape(-1, h, hd)  # (V, H, hd) scratch pad
+    ssrc_g = gathered[:, h * hd :]  # (V, H)
+
+    e = jax.nn.leaky_relu(
+        jnp.take(ssrc_g, e_src, axis=0) + jnp.take(s_dst, e_dst, axis=0),
+        negative_slope=0.2,
+    )  # (E, H)
+    # every in-edge of a dst is local -> the softmax needs no second exchange
+    att = jax.vmap(
+        lambda sc: segment_softmax_xla(sc, e_dst, e_val, vl), in_axes=1, out_axes=1
+    )(e)
+    msgs = jnp.take(xp_g, e_src, axis=0) * att[..., None]  # (E, H, hd)
+    flat = jnp.where(e_val[:, None], msgs.reshape(msgs.shape[0], -1), 0)
+    out = jax.ops.segment_sum(
+        flat, e_dst, num_segments=vl, indices_are_sorted=True
+    ).reshape(vl, h, hd)
+    if final:
+        return out.mean(axis=1)  # average heads (GAT output layer)
+    return jax.nn.elu(out.reshape(vl, -1))  # concat heads
+
+
+def make_gat_graphscale_loss(
+    mesh,
+    axes: Sequence[str],
+    vpc: int,
+    n_heads: int,
+    head_dim: int,
+    wire_dtype: Optional[jnp.dtype] = None,
+):
+    """Build ``loss(params, feat, sg, dl, vm, labels, lmask) -> scalar``.
+
+    ``params`` is ``gnn.init(..., GNNConfig(name='gat'), ...)`` (replicated);
+    ``feat`` is (p, Vl, F) (``gnn_parallel.shard_features``) or (V_pad, F)
+    sharded over ``axes``; ``sg``/``dl``/``vm`` are the partition's
+    (p, l=1, E_pad) edge arrays; ``labels``/``lmask`` (V_pad,). The masked
+    softmax cross-entropy is psum-reduced to the global mean. Differentiable
+    in ``params`` (hillclimb trains through it)."""
+    axes = tuple(axes)
+    ax = axes if len(axes) > 1 else axes[0]
+
+    def loss_fn(params, feat, sg, dl, vm, labels, lmask):
+        feat3 = feat.ndim == 3
+
+        def body(params, feat, sg, dl, vm, labels, lmask):
+            x0 = feat[0] if feat3 else feat  # (Vl, F)
+            assert x0.shape[0] == vpc, (x0.shape, vpc)
+            sg_l, dl_l, vm_l = sg[0], dl[0], vm[0]  # (l, E_pad)
+            assert sg_l.shape[0] == 1, "GAT layout uses l == 1 (interval fits scratch)"
+            e_src, e_dst, e_val = sg_l[0], dl_l[0], vm_l[0]
+
+            x = mlp(params["encoder"], x0)  # (Vl, H*hd)
+            x = _gat_layer_dist(
+                params["l1_w"], params["l1_asrc"], params["l1_adst"],
+                x, e_src, e_dst, e_val, ax, final=False, wire_dtype=wire_dtype,
+            )
+            out = _gat_layer_dist(
+                params["l2_w"], params["l2_asrc"], params["l2_adst"],
+                x, e_src, e_dst, e_val, ax, final=True, wire_dtype=wire_dtype,
+            )  # (Vl, OUT)
+
+            lg = out.astype(jnp.float32)
+            lse = jax.nn.logsumexp(lg, axis=-1)
+            gold = jnp.take_along_axis(lg, labels[:, None], axis=-1)[:, 0]
+            num = jax.lax.psum(((lse - gold) * lmask).sum(), ax)
+            den = jax.lax.psum(lmask.sum(), ax)
+            return num / jnp.maximum(den, 1.0)
+
+        edge_spec = P(ax, None, None)
+        feat_spec = P(ax, None, None) if feat3 else P(ax, None)
+        fn = jax.shard_map(
+            body,
+            mesh=mesh,
+            in_specs=(P(), feat_spec, edge_spec, edge_spec, edge_spec, P(ax), P(ax)),
+            out_specs=P(),
+            check_vma=False,
+        )
+        return fn(params, feat, sg, dl, vm, labels, lmask)
+
+    return loss_fn

@@ -1,0 +1,88 @@
+"""GNN message passing over the 2-D-partitioned crossbar engine
+(docs/distributed.md §4): the engine's gather->reduce with (Vl, D) feature
+ROWS as the exchanged payload instead of scalar labels.
+
+Payloads are multi-word per vertex, so this path keeps the flat per-phase
+edge arrays (the packed scalar stream cannot carry a feature row); the
+crossbar exchange and dst-partitioned segment reduce are the same contract
+as ``core.distributed``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import jax_compat
+
+jax_compat.install()
+
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.core.distributed import crossbar_exchange  # noqa: E402
+from repro.core.partition import PartitionedGraph  # noqa: E402
+
+__all__ = ["shard_features", "make_graphscale_aggregate"]
+
+
+def shard_features(
+    feat: np.ndarray, pg: PartitionedGraph, mesh, axis: str = "graph"
+) -> jnp.ndarray:
+    """Node features -> engine vertex order (stride permutation + padding),
+    reshaped (p, Vl, D) and NamedSharding-placed over the graph axis (one
+    core's interval per device)."""
+    feat = np.asarray(feat)
+    d = feat.shape[1]
+    padded = np.zeros((pg.padded_vertices, d), feat.dtype)
+    if pg.perm is not None:
+        padded[pg.perm[: pg.num_vertices]] = feat[: pg.num_vertices]
+    else:
+        padded[: pg.num_vertices] = feat
+    arr = padded.reshape(pg.p, pg.vertices_per_core, d)
+    return jax.device_put(
+        jnp.asarray(arr), NamedSharding(mesh, P(axis, None, None))
+    )
+
+
+def make_graphscale_aggregate(pg: PartitionedGraph, mesh, axis: str = "graph"):
+    """Build ``agg(feat) -> (p, Vl, D)``: for every vertex v, the sum of
+    feat[u] over processing edges (u -> v) — distributed feature aggregation
+    through the phased crossbar (one sub-interval all-gather per phase, all
+    label reads local afterwards)."""
+    assert pg.p == mesh.shape[axis], (pg.p, dict(mesh.shape))
+    sub, l, vpc = pg.sub_size, pg.l, pg.vertices_per_core
+    sg = jnp.asarray(pg.src_gidx)
+    dl = jnp.asarray(pg.dst_lidx)
+    vm = jnp.asarray(pg.valid)
+
+    def body(feat, sg, dl, vm):
+        feat, sg, dl, vm = feat[0], sg[0], dl[0], vm[0]  # this device's shard
+
+        def phase(m, acc):
+            blk = jax.lax.dynamic_slice_in_dim(feat, m * sub, sub, axis=0)
+            gathered = crossbar_exchange(blk, axis)  # (p*sub, D) scratch pad
+            sg_m = jax.lax.dynamic_index_in_dim(sg, m, 0, keepdims=False)
+            dl_m = jax.lax.dynamic_index_in_dim(dl, m, 0, keepdims=False)
+            vm_m = jax.lax.dynamic_index_in_dim(vm, m, 0, keepdims=False)
+            msgs = jnp.take(gathered, sg_m, axis=0)  # (E, D) label reads
+            msgs = jnp.where(vm_m[:, None], msgs, 0)
+            return acc + jax.ops.segment_sum(
+                msgs, dl_m, num_segments=vpc, indices_are_sorted=True
+            )
+
+        acc0 = jnp.zeros((vpc, feat.shape[1]), feat.dtype)
+        return jax.lax.fori_loop(0, l, phase, acc0)[None]
+
+    espec = P(axis, None, None)
+
+    def agg(feat):
+        fn = jax.shard_map(
+            body,
+            mesh=mesh,
+            in_specs=(P(axis, None, None), espec, espec, espec),
+            out_specs=P(axis, None, None),
+            check_vma=False,
+        )
+        return fn(feat, sg, dl, vm)
+
+    return agg

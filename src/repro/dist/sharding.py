@@ -1,0 +1,247 @@
+"""Mesh axis roles + PartitionSpec trees for every architecture family.
+
+``rules_for_mesh`` classifies a mesh's axes into the two roles the launchers
+reason about — ``fsdp`` (batch / parameter-shard axes: ``pod`` + ``data``)
+and ``tp`` (the tensor-parallel ``model`` axis) — and exposes the one
+primitive every spec builder uses: ``axis_if(axis, dim)``, which returns the
+axis only when ``dim`` divides evenly over it (GSPMD rejects ragged shards;
+an indivisible dim stays replicated rather than failing the lowering).
+
+Spec builders return P-trees that MATCH the parameter / batch pytrees
+structurally (``jax.tree.map``-zippable with eval_shape structs — what
+``launch.cells`` does), built by walking the actual struct with
+``tree_map_with_path`` so optional leaves (qk-norm, MoE, edge encoders) never
+desynchronize the trees.
+
+These shardings are placement choices, not numerics: any spec tree here
+yields bit-identical results under GSPMD; the builders encode the measured
+preferences (Megatron-style tp on head/ff/vocab dims, fsdp on d_model,
+sequence-sharded KV caches).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.train.optim import AdamWState
+
+__all__ = [
+    "MeshRules",
+    "rules_for_mesh",
+    "lm_param_specs",
+    "lm_batch_specs",
+    "lm_cache_specs",
+    "state_specs",
+    "replicated_specs",
+    "gnn_batch_specs",
+    "din_param_specs",
+    "din_batch_specs",
+    "din_retrieval_specs",
+]
+
+Axis = Union[str, Tuple[str, ...], None]
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshRules:
+    """Axis roles of one mesh. ``fsdp``/``tp`` are P-ready (str, tuple of
+    strs, or None) so callers can embed them in PartitionSpecs directly."""
+
+    axis_sizes: Tuple[Tuple[str, int], ...]  # mesh axes in order
+    fsdp: Axis  # batch + parameter-shard axes ('pod','data')
+    tp: Axis  # tensor-parallel axis ('model')
+
+    @property
+    def all_axes(self) -> Tuple[str, ...]:
+        return tuple(n for n, _ in self.axis_sizes)
+
+    def size(self, axis: Axis) -> int:
+        """Total device count across ``axis`` (1 for None)."""
+        if axis is None:
+            return 1
+        names = (axis,) if isinstance(axis, str) else tuple(axis)
+        sizes = dict(self.axis_sizes)
+        return math.prod(sizes[n] for n in names)
+
+    def axis_if(self, axis: Axis, dim: int) -> Axis:
+        """``axis`` when ``dim`` shards evenly over it, else None (replicate).
+        Tuple axes collapse to themselves; a 1-sized axis still counts (it
+        divides everything), which keeps mini-mesh cell building trivial."""
+        if axis is None:
+            return None
+        n = self.size(axis)
+        return axis if n > 0 and dim % n == 0 else None
+
+
+def rules_for_mesh(mesh) -> MeshRules:
+    names = tuple(mesh.axis_names)
+    sizes = tuple((n, int(mesh.shape[n])) for n in names)
+    tp: Axis = "model" if "model" in names else None
+    data_axes = tuple(n for n in names if n != "model")
+    fsdp: Axis
+    if len(data_axes) == 0:
+        fsdp = None
+    elif len(data_axes) == 1:
+        fsdp = data_axes[0]
+    else:
+        fsdp = data_axes  # ('pod', 'data'): pod is data-parallel only
+    return MeshRules(axis_sizes=sizes, fsdp=fsdp, tp=tp)
+
+
+# ---------------------------------------------------------------------------
+# LM family
+# ---------------------------------------------------------------------------
+
+
+def _leaf_name(path) -> str:
+    for entry in reversed(path):
+        key = getattr(entry, "key", None)
+        if isinstance(key, str):
+            return key
+    return ""
+
+
+def _lm_leaf_spec(r: MeshRules, name: str, shape: Tuple[int, ...]) -> P:
+    """One LM parameter leaf -> spec. Layer-stacked leaves carry a leading L
+    dim (always replicated); matmul weights shard tp on the 'wide' dim
+    (heads / d_ff / experts / vocab) and fsdp on d_model."""
+    if name == "embed":  # (V, d)
+        return P(r.axis_if(r.tp, shape[0]), r.axis_if(r.fsdp, shape[1]))
+    if name == "unembed":  # (d, V)
+        return P(r.axis_if(r.fsdp, shape[0]), r.axis_if(r.tp, shape[1]))
+    if name in ("wq", "wk", "wv"):  # (L, d, H*hd)
+        return P(None, r.axis_if(r.fsdp, shape[1]), r.axis_if(r.tp, shape[2]))
+    if name == "wo":  # (L, H*hd, d)
+        return P(None, r.axis_if(r.tp, shape[1]), r.axis_if(r.fsdp, shape[2]))
+    if name == "router":  # (L, d, E)
+        return P(None, None, r.axis_if(r.tp, shape[2]))
+    if name in ("w1", "w3"):
+        if len(shape) == 4:  # MoE (L, E, d, f): experts over tp, d over fsdp
+            return P(None, r.axis_if(r.tp, shape[1]), r.axis_if(r.fsdp, shape[2]), None)
+        return P(None, r.axis_if(r.fsdp, shape[1]), r.axis_if(r.tp, shape[2]))
+    if name == "w2":
+        if len(shape) == 4:  # MoE (L, E, f, d)
+            return P(None, r.axis_if(r.tp, shape[1]), None, r.axis_if(r.fsdp, shape[3]))
+        return P(None, r.axis_if(r.tp, shape[1]), r.axis_if(r.fsdp, shape[2]))
+    # norms / scales / anything small: replicate
+    return P(*([None] * len(shape)))
+
+
+def lm_param_specs(r: MeshRules, cfg) -> Any:
+    """P-tree matching ``transformer.init_params(key, cfg)``."""
+    from repro.models.transformer import init_params
+
+    struct = jax.eval_shape(lambda: init_params(jax.random.key(0), cfg))
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _lm_leaf_spec(r, _leaf_name(path), tuple(leaf.shape)),
+        struct,
+    )
+
+
+def lm_batch_specs(r: MeshRules, batch: int) -> dict:
+    b = r.axis_if(r.fsdp, batch)
+    return {"tokens": P(b, None), "labels": P(b, None)}
+
+
+def lm_cache_specs(r: MeshRules, cfg, batch: int, max_len: int) -> dict:
+    """KV cache (L, B, Hkv, S, hd): batch over fsdp, SEQUENCE over tp (the
+    kv-head count rarely divides a 16-way model axis; sequence always can be
+    padded to)."""
+    b = r.axis_if(r.fsdp, batch)
+    s = r.axis_if(r.tp, max_len)
+    spec = P(None, b, None, s, None)
+    return {"k": spec, "v": spec}
+
+
+# ---------------------------------------------------------------------------
+# generic state / replicated helpers
+# ---------------------------------------------------------------------------
+
+
+def state_specs(param_specs) -> dict:
+    """Extend parameter specs to the full TrainState: Adam moments mirror the
+    parameter layout leaf-for-leaf, the step counter is replicated."""
+    return {
+        "params": param_specs,
+        "opt": AdamWState(step=P(), mu=param_specs, nu=param_specs),
+    }
+
+
+def replicated_specs(struct) -> Any:
+    """Fully-replicated P-tree matching ``struct`` (GNN params are small)."""
+    return jax.tree.map(lambda _: P(), struct)
+
+
+# ---------------------------------------------------------------------------
+# GNN family
+# ---------------------------------------------------------------------------
+
+
+def gnn_batch_specs(r: MeshRules, n_nodes: int, n_edges: int, n_graphs: int):
+    """GraphBatch specs: nodes and edges shard over the WHOLE mesh when
+    divisible (graph tensors dwarf the replicated params)."""
+    from repro.models.gnn.common import GraphBatch
+
+    an = r.axis_if(r.all_axes, n_nodes)
+    ae = r.axis_if(r.all_axes, n_edges)
+    return GraphBatch(
+        node_feat=P(an, None),
+        edge_src=P(ae),
+        edge_dst=P(ae),
+        node_mask=P(an),
+        edge_mask=P(ae),
+        graph_id=P(an),
+        n_graphs=n_graphs,
+        edge_feat=None,
+        edge_dist=P(ae),
+    )
+
+
+# ---------------------------------------------------------------------------
+# RecSys (DIN)
+# ---------------------------------------------------------------------------
+
+
+def din_param_specs(r: MeshRules, cfg) -> Any:
+    """DIN params: the (huge) item table is row-sharded — over tp for the
+    'take'/'crossbar' lookups, over the WHOLE mesh for 'crossbar_full' (table
+    grads + Adam moments then shard everywhere, no fsdp all-reduce). The
+    cate table and MLPs are small and replicate."""
+    from repro.models.recsys.din import init
+
+    struct = jax.eval_shape(lambda: init(jax.random.key(0), cfg))
+    rows_axis = r.all_axes if cfg.lookup == "crossbar_full" else r.tp
+
+    def spec(path, leaf):
+        if _leaf_name(path) == "item_table":
+            return P(r.axis_if(rows_axis, leaf.shape[0]), None)
+        return P(*([None] * len(leaf.shape)))
+
+    return jax.tree_util.tree_map_with_path(spec, struct)
+
+
+def din_batch_specs(r: MeshRules, batch: int) -> dict:
+    b = r.axis_if(r.all_axes, batch) or r.axis_if(r.fsdp, batch)
+    return {
+        "hist_items": P(b, None),
+        "hist_cates": P(b, None),
+        "target_item": P(b),
+        "target_cate": P(b),
+        "profile_bag": P(b, None),
+        "labels": P(b),
+    }
+
+
+def din_retrieval_specs(r: MeshRules, n_candidates: int) -> dict:
+    c = r.axis_if(r.all_axes, n_candidates)
+    return {
+        "hist_items": P(None, None),
+        "hist_cates": P(None, None),
+        "profile_bag": P(None, None),
+        "cand_items": P(c),
+        "cand_cates": P(c),
+    }

@@ -55,7 +55,7 @@ def _ns(spec_tree, mesh):
 
 
 # ---------------------------------------------------------------------------
-# analytic MODEL_FLOPS (documented approximations; see DESIGN.md §8)
+# analytic MODEL_FLOPS (documented approximations, kept next to each formula)
 # ---------------------------------------------------------------------------
 
 
@@ -362,7 +362,7 @@ def _din_cell(arch: ArchConfig, shape: ShapeCell, mesh) -> Cell:
         from repro.dist.embedding import make_crossbar_lookup
 
         # ids sharded over the whole mesh; each model-axis group exchanges
-        # requests/responses with its 16 table shards (DESIGN.md §2.2)
+        # requests/responses with its 16 table shards (docs/distributed.md §4)
         lookup_fn = make_crossbar_lookup(
             mesh, table_axis=r.tp, batch_axes=r.all_axes, capacity_factor=2.0
         )

@@ -2,7 +2,8 @@
 
 Single pod: (data=16, model=16) = 256 chips (TPU v5e pod slice).
 Multi-pod:  (pod=2, data=16, model=16) = 512 chips; the 'pod' axis crosses
-the slow inter-pod links and is used for data parallelism only (DESIGN.md §5).
+the slow inter-pod links and is used for data parallelism only (the graph
+mesh's channel <-> device mapping is docs/distributed.md §1).
 
 ``make_production_mesh`` is a function (never a module-level constant) so
 importing this module touches no jax device state — the dry-run must set
@@ -11,6 +12,10 @@ XLA_FLAGS before anything initializes the backend.
 from __future__ import annotations
 
 import jax
+
+from repro.core import jax_compat
+
+jax_compat.install()  # make_mesh(axis_types=...) / AxisType on jax 0.4.x
 
 __all__ = ["make_production_mesh", "make_graph_mesh", "HW"]
 

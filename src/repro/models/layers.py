@@ -155,7 +155,7 @@ def swiglu(x: jnp.ndarray, w1, w3, w2) -> jnp.ndarray:
 # Sort-based MoE (capacity-dropped): flatten (token, expert) assignments, sort
 # by expert, pack each expert's tokens into (E, C) slots, grouped-GEMM, and
 # combine weighted by router gates. Irregular gather/scatter — shares the
-# segment-ops substrate with the GraphScale engine (DESIGN.md §6).
+# segment-ops substrate with the GraphScale engine (docs/distributed.md §4).
 # ---------------------------------------------------------------------------
 
 

@@ -4,7 +4,7 @@ embed_dim=18, seq_len=100, attention MLP 80-40, output MLP 200-80,
 interaction = target attention over the user behavior sequence (unnormalized
 attention weights, per the paper).
 
-The embedding tables are the hot path (DESIGN.md §6: sharded lookup == the
+The embedding tables are the hot path (docs/distributed.md §4: sharded lookup == the
 GraphScale vertex-label crossbar with rows as labels). The multi-hot user
 profile feature routes through the EmbeddingBag kernel path.
 """

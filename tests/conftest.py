@@ -22,11 +22,11 @@ if importlib.util.find_spec("hypothesis") is None:
 
 import repro.core.graph as G
 
-# ``repro.dist`` (multi-device sharding/checkpoint/fault-tolerance subsystem)
-# is not implemented yet — see ROADMAP.md "Open items". Modules that import it
-# at collection time are ignored outright; individual tests that reach for it
-# at runtime (subprocess snippets, launch/cells) import ``requires_dist``
-# from this conftest.
+# ``repro.dist`` landed in PR 5 (ISSUE 5); the guard stays so a broken or
+# partially-checked-out tree degrades to skips instead of collection errors.
+# Tests that reach for it at runtime (subprocess snippets, launch/cells)
+# import ``requires_dist`` from this conftest — a no-op while the package
+# imports cleanly.
 HAS_DIST = importlib.util.find_spec("repro.dist") is not None
 collect_ignore = []
 if not HAS_DIST:

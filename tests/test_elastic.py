@@ -58,7 +58,9 @@ def _run(devices: int, ckpt: str, steps: int) -> dict:
     res = subprocess.run(
         [sys.executable, "-c", code, ckpt, str(steps)],
         capture_output=True, text=True, timeout=900,
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"}, cwd="/root/repo",
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+             "JAX_PLATFORMS": "cpu"},  # libtpu present: pin the CPU backend
+        cwd="/root/repo",
     )
     assert res.returncode == 0, f"STDOUT:{res.stdout}\nSTDERR:{res.stderr}"
     return json.loads(res.stdout.strip().splitlines()[-1])

@@ -275,10 +275,14 @@ def test_bfs_unreached_hub_row_stays_inf(rng):
     np.testing.assert_array_equal(res.labels["label"], oracle.labels["label"])
 
 
-def test_pagerank_split_conserves_mass(rng):
+def test_pagerank_split_conserves_mass():
     """Sum identity regression: virtual-row partials must add each edge
-    exactly once — total rank mass is conserved under splitting."""
-    g = _hub_graph(rng, n=256, hub_deg=2000, bg=500)
+    exactly once — total rank mass is conserved under splitting.
+
+    Uses a private rng (NOT the shared session fixture): the graph must not
+    depend on how many draws earlier tests made, or the reassociation
+    tolerance turns order-dependent (seen as a full-suite-only flake)."""
+    g = _hub_graph(np.random.default_rng(12), n=256, hub_deg=2000, bg=500)
     cfg = dict(p=2, l=2, lane=8, tile_vb=16, tile_eb=16)
     pg = partition_2d(g, PartitionConfig(**cfg))
     assert pg.split_rows > 0
