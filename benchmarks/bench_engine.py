@@ -14,6 +14,15 @@ the two-level-reduce effect: ``t_max`` with hub-row splitting vs the unsplit
 layout's ``t_max`` (``t_max_reduction``, the stacked-stream shrink the single
 fattest row block used to dictate).
 
+The high-diameter suite (ISSUE 6) is where frontier-aware DYNAMIC tile
+scheduling bites: on path/grid graphs the BFS/SSSP frontier is a thin
+wavefront, so per-iteration coverage∧frontier tile skipping
+(``dynamic_skipped_tile_fraction``, recorded per iteration by
+``run_frontier_trace``) retires far more work than the static padding-tile
+skip — the suite records both next to each other, plus dynamic-vs-static
+wall-clock at matched shapes and the three-way (dynamic/static/XLA)
+agreement.
+
 The channel-scaling sweep (ISSUE 5) runs the DISTRIBUTED engine — the same
 compressed stream NamedSharding-placed one core per device — at 1/2/4/8
 simulated memory channels (``--xla_force_host_platform_device_count``, each
@@ -39,10 +48,10 @@ import numpy as np
 
 import repro.core.graph as G
 from benchmarks.common import mteps, time_call
-from repro.core.engine import EngineOptions, run
+from repro.core.engine import EngineOptions, run, run_frontier_trace
 from repro.core.partition import PartitionConfig, partition_2d
-from repro.core.problems import bfs, pagerank
-from repro.data.synthetic import skewed_graph
+from repro.core.problems import bfs, pagerank, wcc
+from repro.data.synthetic import path_grid_graph, skewed_graph
 
 JSON_PATH = pathlib.Path(__file__).resolve().parent.parent / "BENCH_engine.json"
 
@@ -68,6 +77,24 @@ _PR_RTOL, _PR_ATOL = 2e-5, 1e-8
 SKEW_METRIC_KEYS = (
     "t_max", "t_max_unsplit", "t_max_reduction", "split_row_fraction",
     "skipped_tile_fraction", "skipped_tile_fraction_unsplit", "agreement",
+)
+
+# high-diameter graphs (ISSUE 6): thin BFS/WCC wavefronts, many iterations —
+# the regime where the per-iteration coverage∧frontier skip dwarfs the static
+# padding skip. grid-shuffled permutes vertex ids so the wavefront scatters
+# across source sub-intervals instead of marching along the id order.
+HIGHDIAM = {
+    "path-512": dict(width=512, height=1),
+    "grid-shuffled": dict(width=96, height=24, shuffle=True, seed=5),
+}
+HIGHDIAM_CFG = dict(p=4, l=2, lane=8, tile_vb=64, tile_eb=64)
+
+# metric keys every per-problem dynamic-trace dict must carry (asserted by
+# --smoke / CI); the record itself also carries the static
+# "skipped_tile_fraction" they are compared against, plus "agreement".
+DYNAMIC_METRIC_KEYS = (
+    "dynamic_skipped_tile_fraction", "mean_dynamic_skipped_tile_fraction",
+    "dense_iterations", "iterations",
 )
 
 
@@ -174,6 +201,70 @@ def _bench_skew(emit, records):
         )
 
 
+def highdiam_record(gname, gspec, cfg, prob_pairs, time_fn=None):
+    """One high-diameter record: per-iteration dynamic skip trace + three-way
+    (dynamic / static / XLA) agreement. ``time_fn=None`` skips timing."""
+    g = path_grid_graph(**gspec)
+    pg = partition_2d(g, PartitionConfig(**cfg))
+    row = {
+        "graph": gname, "V": g.num_vertices, "E": g.num_edges,
+        "p": pg.p, "l": pg.l, "tile_shape": list(pg.tile_word.shape),
+        "src_bits": pg.src_bits,
+        "stream_bytes_per_edge": pg.stream_bytes_per_edge,
+        "coverage_bytes_per_edge": pg.coverage_bytes_per_edge,
+        "skipped_tile_fraction": pg.skipped_tile_fraction,
+        "dynamic": {}, "agreement": {},
+    }
+    opt_dyn = EngineOptions(backend="pallas")  # dynamic_tile_skip defaults on
+    opt_sta = EngineOptions(backend="pallas", dynamic_tile_skip=False)
+    opt_xla = EngineOptions(backend="xla")
+    for pname, prob in prob_pairs:
+        res_x = run(prob, g, pg, opt_xla)
+        res_d = run(prob, g, pg, opt_dyn)
+        res_s = run(prob, g, pg, opt_sta)
+        row["agreement"][pname] = (
+            _labels_agree(prob, res_d.labels["label"], res_x.labels["label"])
+            and _labels_agree(prob, res_s.labels["label"], res_x.labels["label"])
+            and res_d.iterations == res_s.iterations == res_x.iterations
+        )
+        trace = run_frontier_trace(prob, g, pg, opt_dyn)
+        row["dynamic"][pname] = {
+            "iterations": trace["iterations"],
+            "dense_iterations": trace["dense_iterations"],
+            "dynamic_skipped_tile_fraction": trace["dynamic_skipped_tile_fraction"],
+            "mean_dynamic_skipped_tile_fraction":
+                trace["mean_dynamic_skipped_tile_fraction"],
+        }
+        if time_fn is not None:
+            for tag, opts in (("dynamic", opt_dyn), ("static", opt_sta),
+                              ("xla", opt_xla)):
+                t = time_fn(lambda: run(prob, g, pg, opts))
+                row[f"{pname}_{tag}_us"] = t * 1e6
+                row[f"{pname}_{tag}_mteps"] = mteps(g.num_edges, t)
+    return row
+
+
+def _bench_highdiam(emit, records):
+    for gname, gspec in HIGHDIAM.items():
+        row = highdiam_record(
+            gname, gspec, HIGHDIAM_CFG,
+            (("bfs", bfs(0)), ("wcc", wcc())),
+            time_fn=time_call,
+        )
+        records.append(row)
+        for pname in ("bfs", "wcc"):
+            d = row["dynamic"][pname]
+            emit(
+                f"engine/{gname}/{pname}/dynamic",
+                row[f"{pname}_dynamic_us"],
+                f"iters={d['iterations']} "
+                f"dyn_skip={d['mean_dynamic_skipped_tile_fraction']:.3f} "
+                f"static_skip={row['skipped_tile_fraction']:.3f} "
+                f"static_us={row[f'{pname}_static_us']:.0f} "
+                f"agree={row['agreement'][pname]}",
+            )
+
+
 # ---------------------------------------------------------------------------
 # channel-scaling sweep: the distributed engine at 1/2/4/8 simulated memory
 # channels. Each count runs in a subprocess (jax locks the device count), the
@@ -270,6 +361,7 @@ def main(emit):
     records = []
     _bench_scales(emit, records)
     _bench_skew(emit, records)
+    _bench_highdiam(emit, records)
     channel_records = []
     _bench_channels(emit, channel_records)
     assert all(
@@ -308,6 +400,26 @@ def smoke(emit):
         "engine/smoke", 0.0,
         f"t_max={row['t_max']}/{row['t_max_unsplit']} "
         f"reduction={row['t_max_reduction']:.2f} agreement=ok",
+    )
+    # one high-diameter dynamic-skip point: the per-iteration coverage∧frontier
+    # skip must beat the static padding skip where the frontier is a wavefront
+    hd = highdiam_record(
+        "smoke-path", dict(width=192), dict(p=2, l=2, lane=8, tile_vb=32, tile_eb=32),
+        (("bfs", bfs(0)), ("wcc", wcc())),
+        time_fn=None,
+    )
+    for pname in ("bfs", "wcc"):
+        for key in DYNAMIC_METRIC_KEYS:
+            assert key in hd["dynamic"][pname], f"missing dynamic metric {key!r}"
+        assert hd["agreement"][pname], hd["agreement"]
+        assert (
+            hd["dynamic"][pname]["mean_dynamic_skipped_tile_fraction"]
+            > hd["skipped_tile_fraction"]
+        ), hd
+    emit(
+        "engine/smoke-dynamic", 0.0,
+        f"bfs_dyn_skip={hd['dynamic']['bfs']['mean_dynamic_skipped_tile_fraction']:.3f} "
+        f"static_skip={hd['skipped_tile_fraction']:.3f} agreement=ok",
     )
     # one multi-channel point: 2 simulated channels, small graph
     rec = _spawn_channel_child(2, extra_args=("--channel-scale", "8"))

@@ -16,8 +16,9 @@ fi
 python -m pytest -x -q
 
 # tiny-graph perf-path smoke: metric keys + Pallas/XLA agreement asserted
-# (no timing thresholds) + one multi-channel distributed point; full timings
-# are `make bench-engine`.
+# (no timing thresholds), one high-diameter dynamic-skip point (mean dynamic
+# skipped-tile fraction must beat the static padding skip), and one
+# multi-channel distributed point; full timings are `make bench-engine`.
 python -m benchmarks.bench_engine --smoke
 
 # sharded job (make check-dist): distributed engine + repro.dist suites under

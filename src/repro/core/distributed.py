@@ -40,10 +40,12 @@ jax_compat.install()  # jax.shard_map / make_mesh(axis_types) / AxisType on 0.4.
 
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P  # noqa: E402
 
+from repro.core import frontier_words as fwords  # noqa: E402
 from repro.core.engine import (  # noqa: E402
     EngineOptions,
     EngineResult,
     channel_phase_reduce_pallas,
+    dynamic_skip_enabled,
     make_iteration,
     phase_consts_at,
     prepare_labels,
@@ -62,7 +64,7 @@ __all__ = [
 
 # fixed flattening order for the packed per-channel constants (shard_map takes
 # positional args; None entries are elided per problem/partition)
-_CONST_KEYS = ("word", "word_hi", "counts", "w", "row_pos", "split_map")
+_CONST_KEYS = ("word", "word_hi", "counts", "w", "row_pos", "split_map", "coverage")
 
 
 def crossbar_exchange(sub_payload: jnp.ndarray, axis: str) -> jnp.ndarray:
@@ -125,6 +127,7 @@ def build_distributed_run(
     const_keys = tuple(k for k in _CONST_KEYS if consts[k] is not None)
     const_vals = tuple(consts[k] for k in const_keys)
     sub_size = pg.sub_size
+    dyn = dynamic_skip_enabled(problem, pg, opts)
 
     def body(labels, *cvals):
         # shard_map blocks keep a leading core dim of size 1 -> squeeze labels
@@ -136,36 +139,90 @@ def build_distributed_run(
         }
         cm_all = dict(zip(const_keys, cvals))
         cm_all.update({k: None for k in _CONST_KEYS if k not in const_keys})
+        # coverage feeds the active-tile schedule below, not the phase reduce
+        coverage = cm_all.pop("coverage")
 
-        def reduce_at_phase(m, labels_local):
+        def reduce_at_phase(m, labels_local, active=None):
             payload = problem.src_transform(labels_local)  # (Vl,) elementwise
             sub = jax.lax.dynamic_slice_in_dim(
                 payload, m * sub_size, sub_size, axis=0
             )
             gathered = crossbar_exchange(sub, axis)  # (G,) scratch pad
             reduced = channel_phase_reduce_pallas(
-                problem, pg, gathered, phase_consts_at(cm_all, m), opts
+                problem, pg, gathered, phase_consts_at(cm_all, m), opts, active
             )  # (1, Vl)
             return reduced[0]
 
-        iteration = make_iteration(problem, pg, opts, reduce_at_phase)
+        phase_active = density_fn = None
+        if dyn:
+            counts = cm_all["counts"]  # (1, l, R) this channel's shard
 
-        def cond(carry):
-            _, it, changed = carry
-            return jnp.logical_and(changed, it < opts.max_iters)
+            def phase_active(m, live_fw, use_dense):
+                # the per-channel frontier words ride the SAME crossbar as
+                # the labels: all-gathering the p phase-m (Ws,) slices in
+                # core order yields exactly the gathered-block word layout
+                # the coverage bitmaps index (docs/tile_layout.md §7).
+                cov_m = jax.lax.dynamic_index_in_dim(
+                    coverage, m, axis=1, keepdims=False
+                )  # (1, R, T, Wc)
+                cnt_m = jax.lax.dynamic_index_in_dim(
+                    counts, m, axis=1, keepdims=False
+                )  # (1, R)
+                local = jax.lax.dynamic_index_in_dim(
+                    live_fw, m, axis=-2, keepdims=False
+                )  # (Ws,)
+                gfw = crossbar_exchange(local, axis)  # (p * Ws,)
+                return fwords.frontier_active_tiles(cov_m, gfw, cnt_m, use_dense)
 
-        def step(carry):
-            labels, it, _ = carry
-            new = iteration(labels)
-            local_changed = problem.not_converged(labels, new)
-            changed = (
-                jax.lax.psum(local_changed.astype(jnp.int32), axis) > 0
-            )  # cores agree to stop only when NO core changed (processor ctrl)
-            return new, it + 1, changed
+            def density_fn(fw):
+                # GLOBAL popcount: every channel sees the same density and
+                # takes the same lax.cond branch (collectives inside the
+                # dense/dynamic arms must line up across devices).
+                return jax.lax.psum(fwords.frontier_popcount(fw), axis)
 
-        labels, iters, changed = jax.lax.while_loop(
-            cond, step, (labels, jnp.int32(0), jnp.bool_(True))
+        iteration = make_iteration(
+            problem, pg, opts, reduce_at_phase, phase_active, density_fn
         )
+
+        if dyn:
+
+            def cond(carry):
+                _, _, it, changed = carry
+                return jnp.logical_and(changed, it < opts.max_iters)
+
+            def step(carry):
+                labels, fw, it, _ = carry
+                new, nf = iteration(labels, fw)
+                changed = (
+                    jax.lax.psum(
+                        jnp.any(nf != jnp.uint32(0)).astype(jnp.int32), axis
+                    )
+                    > 0
+                )  # free convergence check: stop when EVERY frontier is empty
+                return new, nf, it + 1, changed
+
+            fw0 = fwords.full_frontier_words(pg.l, sub_size)  # (l, Ws) local
+            labels, _, iters, changed = jax.lax.while_loop(
+                cond, step, (labels, fw0, jnp.int32(0), jnp.bool_(True))
+            )
+        else:
+
+            def cond(carry):
+                _, it, changed = carry
+                return jnp.logical_and(changed, it < opts.max_iters)
+
+            def step(carry):
+                labels, it, _ = carry
+                new = iteration(labels)
+                local_changed = problem.not_converged(labels, new)
+                changed = (
+                    jax.lax.psum(local_changed.astype(jnp.int32), axis) > 0
+                )  # cores agree to stop only when NO core changed
+                return new, it + 1, changed
+
+            labels, iters, changed = jax.lax.while_loop(
+                cond, step, (labels, jnp.int32(0), jnp.bool_(True))
+            )
         labels = {
             k: (
                 v[None]

@@ -46,10 +46,27 @@ Two step-2 backends, selected by ``EngineOptions.backend``:
 
 Edge-index constants are converted to device arrays ONCE per trace, outside
 the phase ``fori_loop`` body (they used to be re-wrapped per phase).
+
+Frontier-aware dynamic tile scheduling (``EngineOptions.dynamic_tile_skip``,
+on by default): min problems on the Pallas backend additionally carry a
+frontier bitmap (``core/frontier_words.py``) across iterations — the packed
+words of "which sources changed" — and each phase ANDs the partition-time
+per-tile coverage bitmaps against the live frontier to skip REAL tiles none
+of whose sources changed, on top of the static padding-tile skip. A density
+switch (``lax.cond`` on frontier popcount vs ``dynamic_skip_density``) falls
+back to the dense all-real-tiles path while the frontier is wide, and the
+frontier doubles as the convergence check (empty frontier == converged),
+replacing the separate ``not_converged`` label diff. The async path augments
+the live frontier per phase with this iteration's merges, which makes the
+dynamic schedule BIT-IDENTICAL per iteration to the dense async schedule
+(monotone-min argument: every skipped tile's sources are unchanged since the
+tile last ran, so its contributions are already merged) — same labels, same
+iteration counts, just fewer tiles streamed.
 """
 from __future__ import annotations
 
 import dataclasses
+from collections import OrderedDict
 from functools import partial
 from typing import Dict, Tuple
 
@@ -57,6 +74,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import frontier_words as fwords
 from repro.core.partition import PartitionedGraph
 from repro.core.problems import Problem
 
@@ -65,8 +83,10 @@ __all__ = [
     "EngineResult",
     "prepare_labels",
     "run",
+    "run_frontier_trace",
     "unpad_labels",
     "make_iteration",
+    "dynamic_skip_enabled",
     "channel_phase_reduce_pallas",
     "channel_phase_reduce_xla",
 ]
@@ -84,10 +104,34 @@ class EngineOptions:
     # per phase covers all p cores). 'xla': materialize-then-reduce oracle.
     backend: str = "pallas"
     kernel_interpret: bool = True  # Pallas interpret mode (CPU); False on TPU
+    # frontier-aware dynamic tile scheduling (min problems, pallas backend):
+    # skip real tiles whose coverage bitmap misses the live frontier. Safe to
+    # leave on: results and iteration counts are identical to the static
+    # schedule (see module docstring); it only changes which tiles stream.
+    dynamic_tile_skip: bool = True
+    # dense fallback: while frontier popcount >= density * total source bits,
+    # run the static all-real-tiles schedule (the coverage AND would skip
+    # almost nothing on a wide frontier). 0.0 = always dense (static
+    # schedule via the dynamic carry); > 1.0 = never dense.
+    dynamic_skip_density: float = 0.5
 
     def __post_init__(self):
         if self.backend not in _BACKENDS:
             raise ValueError(f"backend must be one of {_BACKENDS}, got {self.backend!r}")
+
+
+def dynamic_skip_enabled(problem, pg, opts: EngineOptions) -> bool:
+    """Frontier skipping is sound only for monotone min reduces (a skipped
+    tile's sources re-contribute values already merged); sum problems
+    (PageRank) need every contribution every iteration and stay dense. Also
+    requires the Pallas backend (the oracle materializes everything anyway)
+    and partition-time coverage bitmaps."""
+    return bool(
+        opts.dynamic_tile_skip
+        and opts.backend == "pallas"
+        and problem.reduce_kind == "min"
+        and getattr(pg, "tile_coverage", None) is not None
+    )
 
 
 @dataclasses.dataclass
@@ -190,7 +234,7 @@ def phase_consts_at(consts, m):
     }
 
 
-def channel_phase_reduce_pallas(problem, pg, gathered, cm, opts):
+def channel_phase_reduce_pallas(problem, pg, gathered, cm, opts, active=None):
     """THE fused gather-map-reduce primitive (steps 1+2 of a phase), channel
     local: ONE ``pallas_call`` over grid (n, R, T) does unpack + gather + map
     UDF + segment reduce against the phase's gathered crossbar block, reading
@@ -204,7 +248,13 @@ def channel_phase_reduce_pallas(problem, pg, gathered, cm, opts):
     slice of the packed constants (``phase_consts_at``). No (n, E_pad)
     per-edge array is materialized. With hub-row splitting the kernel output
     is over VIRTUAL rows and the second-level combine folds the partials into
-    natural rows (still no per-edge materialization). Returns (n, Vl)."""
+    natural rows (still no per-edge materialization). Returns (n, Vl).
+
+    ``active`` (traced (n, R, T) bool, from ``frontier_active_tiles`` — must
+    already be ANDed with the real-tile mask) engages frontier-aware dynamic
+    skipping: it is folded to the kernel's scalar-prefetched fetch map, which
+    REPLACES the static tile counts, so inactive tiles are never decoded,
+    gathered, or reduced this launch. None = the static schedule."""
     from repro.kernels.csr_gather_reduce.kernel import gather_reduce_cores_pallas
     from repro.kernels.csr_gather_reduce.ops import combine_split_rows
 
@@ -214,6 +264,7 @@ def channel_phase_reduce_pallas(problem, pg, gathered, cm, opts):
         cm["counts"],
         cm["word_hi"],
         cm["w"],
+        fwords.active_fetch_map(active) if active is not None else None,
         num_rows=pg.packed_rows_per_core,
         vb=pg.tile_vb,
         src_bits=pg.src_bits,
@@ -258,14 +309,15 @@ def _gather_local(problem, pg, labels, m):
     return sub.reshape(pg.gathered_size)  # (G,) scratch pads
 
 
-def _phase_reduce_pallas(problem, pg, consts, labels, m, opts):
+def _phase_reduce_pallas(problem, pg, consts, labels, m, opts, active=None):
     gathered = _gather_local(problem, pg, labels, m)
     return channel_phase_reduce_pallas(
-        problem, pg, gathered, phase_consts_at(consts, m), opts
+        problem, pg, gathered, phase_consts_at(consts, m), opts, active
     )
 
 
-def _phase_reduce_xla(problem, pg, consts, labels, m, opts):
+def _phase_reduce_xla(problem, pg, consts, labels, m, opts, active=None):
+    assert active is None, "dynamic tile skipping requires the pallas backend"
     gathered = _gather_local(problem, pg, labels, m)
     return channel_phase_reduce_xla(
         problem, pg, gathered, phase_consts_at(consts, m), opts
@@ -277,57 +329,177 @@ def make_iteration(
     pg: PartitionedGraph,
     opts: EngineOptions,
     reduce_at_phase=None,
+    phase_active=None,
+    density_fn=None,
+    with_stats: bool = False,
 ):
     """Build one engine iteration (the l-phase loop + apply semantics).
 
-    ``reduce_at_phase(m, labels) -> reduced`` supplies steps 1+2 of phase m;
-    ``reduced`` must match ``labels[merge_field]``'s shape. When None (the
-    single-process engine) it is built from the packed edge constants and the
-    backend's channel phase reduce. The distributed engine passes its own —
-    crossbar all-gather + the SAME ``channel_phase_reduce_pallas`` on a
+    ``reduce_at_phase(m, labels[, active]) -> reduced`` supplies steps 1+2 of
+    phase m; ``reduced`` must match ``labels[merge_field]``'s shape. When None
+    (the single-process engine) it is built from the packed edge constants and
+    the backend's channel phase reduce. The distributed engine passes its own
+    — crossbar all-gather + the SAME ``channel_phase_reduce_pallas`` on a
     one-channel shard — so apply semantics (async min merge vs synchronous
-    accumulate + finalize) exist exactly once."""
+    accumulate + finalize) exist exactly once.
+
+    The returned ``iteration(labels, frontier=None)`` has two calling modes:
+
+      * ``iteration(labels)`` — the static schedule, exactly the historical
+        behavior (every real tile streams); returns the new labels.
+      * ``iteration(labels, frontier)`` — frontier-aware dynamic scheduling
+        (requires ``dynamic_skip_enabled``). ``frontier`` is the packed label
+        -change bitmap of the previous iteration (``(..., l, Ws)`` uint32,
+        ``full_frontier_words`` on iteration 0); returns ``(new_labels,
+        new_frontier)`` — the new frontier is exactly the words of this
+        iteration's label changes, so ``any(new_frontier != 0)`` IS the
+        convergence check. With ``with_stats=True`` a third element is
+        returned: ``{"active_tiles": int32, "use_dense": int32}``.
+
+    Dynamic-mode hooks (the distributed engine overrides both; defaults are
+    the single-process closures): ``phase_active(m, live_frontier, use_dense)
+    -> (n, R, T) bool`` builds phase m's active-tile mask from the live
+    frontier words; ``density_fn(frontier) -> int32`` is the global frontier
+    popcount for the density switch (distributed: psum over channels, so
+    every device takes the same ``lax.cond`` branch)."""
     is_min = problem.reduce_kind == "min"
+    dyn = dynamic_skip_enabled(problem, pg, opts)
     if reduce_at_phase is None:
         consts = _edge_constants(problem, pg, opts)
+        # coverage feeds phase_active below, never the phase reduce itself —
+        # keep it out of the sliced consts so the static path's jaxpr is
+        # untouched and the dynamic path slices it exactly once per phase.
+        coverage = consts.pop("coverage", None)
         reduce_fn = (
             _phase_reduce_pallas if opts.backend == "pallas" else _phase_reduce_xla
         )
 
-        def reduce_at_phase(m, labels):
-            return reduce_fn(problem, pg, consts, labels, m, opts)
+        def reduce_at_phase(m, labels, active=None):
+            return reduce_fn(problem, pg, consts, labels, m, opts, active)
+
+        if dyn and phase_active is None:
+            counts = consts["counts"]
+
+            def phase_active(m, live_fw, use_dense):
+                cov_m = jax.lax.dynamic_index_in_dim(
+                    coverage, m, axis=1, keepdims=False
+                )  # (p, R, T, Wc)
+                cnt_m = jax.lax.dynamic_index_in_dim(
+                    counts, m, axis=1, keepdims=False
+                )  # (p, R)
+                # core-major flatten of the cores' phase-m rows IS the
+                # gathered-block word order (the layout contract).
+                gfw = jax.lax.dynamic_index_in_dim(
+                    live_fw, m, axis=-2, keepdims=False
+                ).reshape(-1)
+                return fwords.frontier_active_tiles(cov_m, gfw, cnt_m, use_dense)
+
+    if dyn:
+        # dense-fallback threshold over GLOBAL real source bits (the frontier
+        # tail bits are never set, so popcount is over real sources only)
+        dense_thr = jnp.int32(
+            int(pg.p * pg.l * pg.sub_size * opts.dynamic_skip_density)
+        )
+        if density_fn is None:
+            density_fn = fwords.frontier_popcount
+
+    def _words_of(old, new):
+        return fwords.frontier_words_from_labels(old, new, pg.l, pg.sub_size)
+
+    def _stats(active_tiles, use_dense):
+        return {
+            "active_tiles": active_tiles,
+            "use_dense": use_dense.astype(jnp.int32),
+        }
 
     if is_min and opts.immediate_updates:
 
-        def iteration(labels):
+        def _merge(labels, reduced):
+            lab = labels[problem.merge_field]
+            merged = jnp.minimum(lab, reduced.astype(lab.dtype))
+            new = dict(labels)
+            new[problem.merge_field] = merged
+            return new, lab, merged
+
+        def _static(labels):
             def phase(m, labels):
-                reduced = reduce_at_phase(m, labels)
-                lab = labels[problem.merge_field]
-                merged = jnp.minimum(lab, reduced.astype(lab.dtype))
-                new = dict(labels)
-                new[problem.merge_field] = merged
-                return new
+                return _merge(labels, reduce_at_phase(m, labels))[0]
 
             return jax.lax.fori_loop(0, pg.l, phase, labels)
+
+        def _dynamic(labels, fw_in):
+            use_dense = density_fn(fw_in) >= dense_thr
+
+            def phase(m, carry):
+                labels, nf, n_act = carry
+                # live frontier = last iteration's changes OR this
+                # iteration's so-far — async phases see fresh labels, so the
+                # schedule must track them to stay identical to dense async.
+                active = phase_active(m, fw_in | nf, use_dense)
+                new, lab, merged = _merge(labels, reduce_at_phase(m, labels, active))
+                nf = nf | _words_of(lab, merged)
+                n_act = n_act + jnp.sum(active, dtype=jnp.int32)
+                return new, nf, n_act
+
+            labels, nf, n_act = jax.lax.fori_loop(
+                0, pg.l, phase, (labels, jnp.zeros_like(fw_in), jnp.int32(0))
+            )
+            # monotone min: the union of per-phase change words == the words
+            # of (labels in vs labels out) — nf IS the next frontier.
+            if with_stats:
+                return labels, nf, _stats(n_act, use_dense)
+            return labels, nf
+
+        def iteration(labels, frontier=None):
+            if frontier is None:
+                return _static(labels)
+            if not dyn:
+                raise ValueError(
+                    "iteration got a frontier but dynamic skipping is "
+                    "disabled (see dynamic_skip_enabled)"
+                )
+            return _dynamic(labels, frontier)
 
         return iteration
 
     # synchronous path: accumulate contributions, apply at iteration end
-    def iteration(labels):
+    def iteration(labels, frontier=None):
+        if frontier is not None and not dyn:
+            raise ValueError(
+                "iteration got a frontier but dynamic skipping is disabled "
+                "(see dynamic_skip_enabled)"
+            )
         lab = labels[problem.merge_field]
         acc_dtype = jnp.float32 if problem.reduce_kind == "sum" else lab.dtype
         acc0 = jnp.full(lab.shape, problem.identity, dtype=acc_dtype)
+        dynamic = frontier is not None
+        use_dense = density_fn(frontier) >= dense_thr if dynamic else None
+        n_act0 = jnp.int32(0)
 
-        def phase(m, acc):
-            reduced = reduce_at_phase(m, labels)
+        def phase(m, carry):
+            acc, n_act = carry
+            if dynamic:
+                # synchronous phases only see LAST iteration's labels, so
+                # the input frontier alone is the live frontier.
+                active = phase_active(m, frontier, use_dense)
+                n_act = n_act + jnp.sum(active, dtype=jnp.int32)
+                reduced = reduce_at_phase(m, labels, active)
+            else:
+                reduced = reduce_at_phase(m, labels)
             if problem.reduce_kind == "min":
-                return jnp.minimum(acc, reduced.astype(acc.dtype))
-            return acc + reduced.astype(acc.dtype)
+                return jnp.minimum(acc, reduced.astype(acc.dtype)), n_act
+            return acc + reduced.astype(acc.dtype), n_act
 
-        acc = jax.lax.fori_loop(0, pg.l, phase, acc0)
+        acc, n_act = jax.lax.fori_loop(0, pg.l, phase, (acc0, n_act0))
         if problem.reduce_kind == "min":
             new = dict(labels)
-            new[problem.merge_field] = jnp.minimum(lab, acc.astype(lab.dtype))
+            merged = jnp.minimum(lab, acc.astype(lab.dtype))
+            new[problem.merge_field] = merged
+            if dynamic:
+                nf = _words_of(lab, merged)
+                if with_stats:
+                    return new, nf, _stats(n_act, use_dense)
+                return new, nf
             return new
         return problem.finalize(labels, acc)
 
@@ -341,6 +513,26 @@ _make_iteration = make_iteration
 @partial(jax.jit, static_argnames=("problem", "pg", "opts"))
 def _run_jit(problem, pg, opts, labels):
     iteration = _make_iteration(problem, pg, opts)
+    if dynamic_skip_enabled(problem, pg, opts):
+        # frontier-carried loop: the per-iteration label-change words both
+        # schedule the next iteration's tiles AND are the convergence check
+        # (empty frontier == no label changed == problem.not_converged False
+        # for the monotone min problems dynamic skipping admits).
+        fw0 = fwords.full_frontier_words(pg.l, pg.sub_size, lead=(pg.p,))
+
+        def cond(carry):
+            _, _, it, changed = carry
+            return jnp.logical_and(changed, it < opts.max_iters)
+
+        def body(carry):
+            labels, fw, it, _ = carry
+            new, nf = iteration(labels, fw)
+            return new, nf, it + 1, jnp.any(nf != jnp.uint32(0))
+
+        labels, _, iters, changed = jax.lax.while_loop(
+            cond, body, (labels, fw0, jnp.int32(0), jnp.bool_(True))
+        )
+        return labels, iters, changed
 
     def cond(carry):
         _, it, changed = carry
@@ -358,7 +550,13 @@ def _run_jit(problem, pg, opts, labels):
     return labels, iters, changed
 
 
-_WRAP_CACHE: dict = {}
+# LRU-bounded (was unbounded: a serving loop running many graphs pinned every
+# Problem/PartitionedGraph ever run for the life of the process). Eviction is
+# safe — the wrapper is only a jit cache key, so re-wrapping an evicted object
+# costs one retrace, never wrong results. The `hit[0] is obj` guard also
+# covers id() reuse after eviction frees the old object.
+_WRAP_CACHE: OrderedDict = OrderedDict()
+_WRAP_CACHE_MAX = 128
 
 
 def _wrap(obj):
@@ -366,9 +564,12 @@ def _wrap(obj):
     key = id(obj)
     hit = _WRAP_CACHE.get(key)
     if hit is not None and hit[0] is obj:
+        _WRAP_CACHE.move_to_end(key)
         return hit[1]
     w = _Hashable(obj)
     _WRAP_CACHE[key] = (obj, w)  # keep obj alive so id stays valid
+    while len(_WRAP_CACHE) > _WRAP_CACHE_MAX:
+        _WRAP_CACHE.popitem(last=False)
     return w
 
 
@@ -385,6 +586,50 @@ def run(
         iterations=int(iters),
         converged=not bool(changed),
     )
+
+
+def run_frontier_trace(
+    problem: Problem, g, pg: PartitionedGraph, opts: EngineOptions = EngineOptions()
+) -> dict:
+    """Host-stepped dynamic run that records the per-iteration schedule.
+
+    Same numerics as ``run`` (one jitted ``iteration(labels, frontier)`` per
+    step), but stepped from the host so each iteration's active-tile count
+    can be read back. Returns a dict with the final ``labels`` /
+    ``iterations`` / ``converged`` plus ``dynamic_skipped_tile_fraction`` — a
+    per-iteration list over the SAME denominator as the static
+    ``pg.skipped_tile_fraction`` (all (core, phase, row-block) x T_max tile
+    slots), so dynamic >= static always holds and the two are directly
+    comparable in BENCH_engine.json — and ``dense_iterations`` (how often the
+    density switch took the wide-frontier fallback)."""
+    if not dynamic_skip_enabled(problem, pg, opts):
+        raise ValueError(
+            "run_frontier_trace needs dynamic skipping: a min problem, the "
+            "pallas backend, coverage bitmaps, and dynamic_tile_skip=True"
+        )
+    labels = prepare_labels(problem, g, pg)
+    step = jax.jit(make_iteration(problem, pg, opts, with_stats=True))
+    fw = fwords.full_frontier_words(pg.l, pg.sub_size, lead=(pg.p,))
+    total_tiles = pg.tile_counts.size * pg.tile_word.shape[3]
+    fractions, dense_iters, it, converged = [], 0, 0, False
+    while it < opts.max_iters:
+        labels, fw, stats = step(labels, fw)
+        fractions.append(1.0 - int(stats["active_tiles"]) / max(total_tiles, 1))
+        dense_iters += int(stats["use_dense"])
+        it += 1
+        if not bool(jnp.any(fw != jnp.uint32(0))):  # free convergence check
+            converged = True
+            break
+    return {
+        "labels": unpad_labels(labels, pg),
+        "iterations": it,
+        "converged": converged,
+        "dynamic_skipped_tile_fraction": fractions,
+        "mean_dynamic_skipped_tile_fraction": (
+            float(np.mean(fractions)) if fractions else 0.0
+        ),
+        "dense_iterations": dense_iters,
+    }
 
 
 class _Hashable:

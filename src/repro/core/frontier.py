@@ -15,10 +15,22 @@ iteration after the expansion peak.
 
 Semantics are IDENTICAL to the dense engine (tested): the cache is updated
 with exactly the labels the dense path would re-gather.
+
+Edge processing streams the COMPRESSED per-channel layout through
+``channel_phase_reduce_pallas`` — the same single phase-reduce implementation
+both engines run — against the cache row (which IS the phase's gathered
+block), so the frontier engine no longer ships the flat (p, l, E_pad)
+``src_gidx``/``dst_lidx``/``valid`` arrays that the compression work removed
+from everything else (they used to double the resident edge footprint here),
+and SSSP edge weights now flow through the packed weight stream instead of
+being silently dropped. The exchange's changed-mask doubles as an EXACT live
+frontier for dynamic tile scheduling: its word-packed form, all-gathered over
+the same crossbar, drives ``frontier_active_tiles`` so tiles none of whose
+sources changed since this phase's last broadcast are skipped outright
+(iteration 0 is forced dense — the initial cache rows were never reduced).
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Dict, Tuple
 
 import jax
@@ -31,9 +43,17 @@ jax_compat.install()  # jax.shard_map on 0.4.x
 
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P  # noqa: E402
 
+from repro.core import frontier_words as fwords  # noqa: E402
+from repro.core.distributed import (  # noqa: E402
+    _CONST_KEYS,
+    place_channel_shards,
+)
 from repro.core.engine import (  # noqa: E402
     EngineOptions,
     EngineResult,
+    channel_phase_reduce_pallas,
+    dynamic_skip_enabled,
+    phase_consts_at,
     prepare_labels,
     unpad_labels,
 )
@@ -43,9 +63,8 @@ from repro.core.problems import Problem
 __all__ = ["run_distributed_frontier", "frontier_wire_bytes"]
 
 
-def _sparse_exchange(payload_sub, prev_mine, cache_row, sub, axis, budget):
+def _sparse_exchange(changed, payload_sub, cache_row, sub, axis, budget):
     """Exchange changed entries only; returns (new cache row, overflowed?)."""
-    changed = payload_sub != prev_mine
     count = changed.sum()
     max_count = jax.lax.pmax(count, axis)
 
@@ -85,7 +104,23 @@ def run_distributed_frontier(
     result plus per-run wire statistics (sparse phases vs full phases)."""
     assert problem.reduce_kind == "min" and opts.immediate_updates
     assert pg.p == mesh.shape[axis]
+    if opts.backend != "pallas":
+        raise ValueError(
+            "run_distributed_frontier streams the compressed per-channel "
+            f"layout (the Pallas phase reduce); backend={opts.backend!r} has "
+            "no frontier variant"
+        )
     sub, l, vpc = pg.sub_size, pg.l, pg.vertices_per_core
+
+    consts = place_channel_shards(problem, pg, mesh, axis)  # raises if no tiles
+    const_keys = tuple(k for k in _CONST_KEYS if consts[k] is not None)
+    const_vals = tuple(consts[k] for k in const_keys)
+    dyn = dynamic_skip_enabled(problem, pg, opts)
+    ws = fwords.words_per_sub(sub)
+    word_pad = ws * fwords.WORD_BITS - sub
+    # per-PHASE density threshold: a phase's frontier lives in the p active
+    # sub-intervals (p * sub source bits), not the whole vertex set
+    dense_thr = jnp.int32(int(pg.p * sub * opts.dynamic_skip_density))
 
     labels0 = prepare_labels(problem, g, pg)
     sharded = {
@@ -95,10 +130,12 @@ def run_distributed_frontier(
         for k, v in labels0.items()
     }
 
-    def body(labels, sg, dl, vm):
+    def body(labels, *cvals):
         labels = {k: (v[0] if getattr(v, "ndim", 0) >= 1 and v.shape[0] == 1 else v)
                   for k, v in labels.items()}
-        sg, dl, vm = sg[0], dl[0], vm[0]
+        cm_all = dict(zip(const_keys, cvals))
+        cm_all.update({k: None for k in _CONST_KEYS if k not in const_keys})
+        coverage = cm_all.pop("coverage")
         my_core = jax.lax.axis_index(axis)  # selects this core's cache slice
         payload0 = problem.src_transform(labels)
         # cache rows start from the true initial gathered blocks (one full
@@ -109,42 +146,61 @@ def run_distributed_frontier(
             init_rows.append(jax.lax.all_gather(blk, axis, axis=0, tiled=True))
         cache0 = jnp.stack(init_rows)  # (l, p*sub)
 
-        def phase(m, carry):
-            labels, cache, nsparse, nfull = carry
-            payload = problem.src_transform(labels)
-            mine = jax.lax.dynamic_slice_in_dim(payload, m * sub, sub, axis=0)
-            prev_mine = jax.lax.dynamic_slice(
-                cache, (m, my_core * sub), (1, sub)
-            )[0]
-            row = jax.lax.dynamic_index_in_dim(cache, m, axis=0, keepdims=False)
-            new_row, overflow, _ = _sparse_exchange(
-                mine, prev_mine, row, sub, axis, budget
-            )
-            cache = jax.lax.dynamic_update_index_in_dim(cache, new_row, m, axis=0)
-            sg_m = jax.lax.dynamic_index_in_dim(sg, m, 0, keepdims=False)
-            dl_m = jax.lax.dynamic_index_in_dim(dl, m, 0, keepdims=False)
-            vm_m = jax.lax.dynamic_index_in_dim(vm, m, 0, keepdims=False)
-            svals = jnp.take(new_row, sg_m, axis=0)
-            contrib = problem.edge_map(svals, None)
-            contrib = jnp.where(vm_m, contrib, jnp.asarray(problem.identity, contrib.dtype))
-            reduced = jax.ops.segment_min(
-                contrib, dl_m, num_segments=vpc, indices_are_sorted=True
-            )
-            lab = labels[problem.merge_field]
-            new = dict(labels)
-            new[problem.merge_field] = jnp.minimum(lab, reduced.astype(lab.dtype))
-            return (
-                new, cache,
-                nsparse + (1 - overflow.astype(jnp.int32)),
-                nfull + overflow.astype(jnp.int32),
-            )
-
         def cond2(carry):
             _, _, it, changed, _, _ = carry
             return jnp.logical_and(changed, it < opts.max_iters)
 
         def body2(carry):
             labels, cache, it, _, ns, nf = carry
+
+            def phase(m, pc):
+                labels, cache, ns, nf = pc
+                payload = problem.src_transform(labels)
+                mine = jax.lax.dynamic_slice_in_dim(payload, m * sub, sub, axis=0)
+                prev_mine = jax.lax.dynamic_slice(
+                    cache, (m, my_core * sub), (1, sub)
+                )[0]
+                row = jax.lax.dynamic_index_in_dim(cache, m, axis=0, keepdims=False)
+                changed_src = mine != prev_mine  # changed since LAST broadcast
+                new_row, overflow, count = _sparse_exchange(
+                    changed_src, mine, row, sub, axis, budget
+                )
+                cache = jax.lax.dynamic_update_index_in_dim(cache, new_row, m, axis=0)
+                active = None
+                if dyn:
+                    # the exchange's changed-mask IS the exact live frontier
+                    # for phase m (changes since the tile could last have
+                    # run), word-packed and ridden over the same crossbar as
+                    # the label values. Iteration 0 must run dense: the
+                    # initial cache rows were never reduced into any label.
+                    local_fw = fwords.pack_bits(
+                        jnp.pad(changed_src, (0, word_pad)) if word_pad
+                        else changed_src
+                    )  # (Ws,)
+                    gfw = jax.lax.all_gather(local_fw, axis, axis=0, tiled=True)
+                    pop = jax.lax.psum(count.astype(jnp.int32), axis)
+                    use_dense = jnp.logical_or(it == 0, pop >= dense_thr)
+                    cov_m = jax.lax.dynamic_index_in_dim(
+                        coverage, m, axis=1, keepdims=False
+                    )  # (1, R, T, Wc)
+                    cnt_m = jax.lax.dynamic_index_in_dim(
+                        cm_all["counts"], m, axis=1, keepdims=False
+                    )  # (1, R)
+                    active = fwords.frontier_active_tiles(
+                        cov_m, gfw, cnt_m, use_dense
+                    )
+                reduced = channel_phase_reduce_pallas(
+                    problem, pg, new_row, phase_consts_at(cm_all, m), opts, active
+                )[0]  # (Vl,)
+                lab = labels[problem.merge_field]
+                new = dict(labels)
+                new[problem.merge_field] = jnp.minimum(lab, reduced.astype(lab.dtype))
+                return (
+                    new, cache,
+                    ns + (1 - overflow.astype(jnp.int32)),
+                    nf + overflow.astype(jnp.int32),
+                )
+
             new, cache, ns, nf = jax.lax.fori_loop(
                 0, l, phase, (labels, cache, ns, nf)
             )
@@ -166,13 +222,14 @@ def run_distributed_frontier(
     fn = jax.shard_map(
         body,
         mesh=mesh,
-        in_specs=(label_spec, P(axis, None, None), P(axis, None, None), P(axis, None, None)),
+        in_specs=(
+            label_spec,
+            *(P(axis, *([None] * (v.ndim - 1))) for v in const_vals),
+        ),
         out_specs=(label_spec, P(), P(), P(), P()),
         check_vma=False,
     )
-    out, iters, changed, nsparse, nfull = jax.jit(fn)(
-        sharded, jnp.asarray(pg.src_gidx), jnp.asarray(pg.dst_lidx), jnp.asarray(pg.valid)
-    )
+    out, iters, changed, nsparse, nfull = jax.jit(fn)(sharded, *const_vals)
     stats = frontier_wire_bytes(pg, int(nsparse), int(nfull), budget,
                                 np.dtype(np.asarray(out[problem.merge_field]).dtype).itemsize)
     res = EngineResult(

@@ -1,0 +1,159 @@
+"""Frontier bitmaps as packed int words — THE shared frontier machinery.
+
+GraphScale's second pillar is asynchronous processing for fast convergence
+(paper §III-A); the missing half of it in this repo was *work-list-driven*
+dispatch: late-stage BFS/WCC/SSSP touches a handful of vertices yet the
+engine streamed every real tile every iteration. This module is the one
+implementation of the frontier notion the repo previously kept twice (the
+engine's ``not_converged`` label diff and ``core/frontier.py``'s
+``_sparse_exchange`` changed-set):
+
+  * a **frontier word** is one uint32 whose bit ``b`` says "source vertex
+    ``w * 32 + b`` of this sub-interval changed" — the same 32-sources-per-
+    word granularity as the partition-time coverage bitmaps
+    (``PartitionedGraph.tile_coverage``), so activity testing is a bitwise
+    AND, never a per-vertex gather;
+  * frontier state is ``(..., l, Ws)`` uint32 with ``Ws =
+    ceil(sub_size / 32)`` — per phase, per core (leading dims are the
+    caller's channel axis: ``(p, l, Ws)`` in-process, ``(l, Ws)`` on a
+    distributed device). Phase ``m``'s *gathered* frontier words are the
+    cores' ``[:, m, :]`` slices concatenated in core order — exactly the
+    layout of the phase's gathered crossbar block, so coverage word ``j``
+    and frontier word ``j`` describe the same 32 sources.
+
+Everything here is jnp and traceable; both engines (``core/engine.py``
+in-process, ``core/distributed.py`` under shard_map) and the
+frontier-compressed exchange (``core/frontier.py``) import from here. No
+imports from any engine module — this sits below all of them.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "WORD_BITS",
+    "words_per_sub",
+    "coverage_word_count",
+    "pack_bits",
+    "frontier_words_from_labels",
+    "full_frontier_words",
+    "frontier_popcount",
+    "frontier_active_tiles",
+    "active_fetch_map",
+]
+
+WORD_BITS = 32
+
+
+def words_per_sub(sub_size: int) -> int:
+    """Frontier words per (core, phase) sub-interval: ceil(sub_size / 32)."""
+    return -(-sub_size // WORD_BITS)
+
+
+def coverage_word_count(p: int, sub_size: int) -> int:
+    """int32 coverage words per tile: the phase's gathered block holds
+    ``p * words_per_sub`` frontier-word slots, one coverage *bit* each."""
+    return -(-(p * words_per_sub(sub_size)) // WORD_BITS)
+
+
+def pack_bits(bits: jnp.ndarray) -> jnp.ndarray:
+    """(..., W*32) bool -> (..., W) uint32; bit ``b`` of word ``w`` is
+    element ``w*32 + b`` (the little-endian convention every consumer —
+    coverage builder, kernels, tests — shares)."""
+    *lead, nb = bits.shape
+    assert nb % WORD_BITS == 0, nb
+    b = bits.reshape(*lead, nb // WORD_BITS, WORD_BITS).astype(jnp.uint32)
+    weights = jnp.left_shift(
+        jnp.uint32(1), jnp.arange(WORD_BITS, dtype=jnp.uint32)
+    )
+    return (b * weights).sum(axis=-1, dtype=jnp.uint32)
+
+
+def frontier_words_from_labels(
+    old: jnp.ndarray, new: jnp.ndarray, l: int, sub_size: int
+) -> jnp.ndarray:
+    """Label diff -> frontier words: (..., Vl) pair -> (..., l, Ws) uint32.
+
+    This IS the convergence check: the run is converged iff every word is
+    zero — for min problems it replaces ``problem.not_converged`` (the
+    separate full label diff) for free.
+    """
+    changed = old != new  # (..., Vl)
+    *lead, vl = changed.shape
+    assert vl == l * sub_size, (vl, l, sub_size)
+    changed = changed.reshape(*lead, l, sub_size)
+    pad = words_per_sub(sub_size) * WORD_BITS - sub_size
+    if pad:
+        width = [(0, 0)] * (changed.ndim - 1) + [(0, pad)]
+        changed = jnp.pad(changed, width)
+    return pack_bits(changed)
+
+
+def full_frontier_words(l: int, sub_size: int, lead=()) -> jnp.ndarray:
+    """The all-active frontier (every real source set, tail bits clear) —
+    the iteration-0 state: initial labels were never reduced, so the first
+    iteration must stream every real tile."""
+    ws = words_per_sub(sub_size)
+    bits = np.zeros(ws * WORD_BITS, dtype=bool)
+    bits[:sub_size] = True
+    shifts = np.arange(WORD_BITS, dtype=np.uint64)
+    words = (
+        (bits.reshape(ws, WORD_BITS).astype(np.uint64) << shifts)
+        .sum(axis=1)
+        .astype(np.uint32)
+    )
+    return jnp.broadcast_to(jnp.asarray(words), tuple(lead) + (l, ws))
+
+
+def frontier_popcount(frontier: jnp.ndarray) -> jnp.ndarray:
+    """Total set bits (int32 scalar) — the density-switch statistic. Callers
+    with a sharded frontier psum this over the channel axis."""
+    return jax.lax.population_count(frontier).astype(jnp.int32).sum()
+
+
+def frontier_active_tiles(
+    coverage_m: jnp.ndarray,  # (n, R, T, Wc) uint32 phase coverage bitmaps
+    gathered_words: jnp.ndarray,  # (Wg,) uint32 phase frontier, gathered order
+    counts_m: jnp.ndarray,  # (n, R) int32 static real-tile counts
+    use_dense=None,  # scalar bool | None: wide-frontier fallback switch
+) -> jnp.ndarray:
+    """The dynamic tile scheduler: (n, R, T) bool active mask for one phase.
+
+    A tile is active iff it is real (``t < counts``) AND its coverage bitmap
+    intersects the set of nonzero frontier words — one vectorized AND over
+    ``Wc`` words per tile, no per-edge or per-source work. ``use_dense``
+    (the ``lax.cond`` density switch) short-circuits to the static all-real
+    mask when the frontier is wide and the AND would save nothing; pass
+    None to always compute the dynamic mask. Word granularity makes the
+    test conservative (a tile sharing a 32-source word with the frontier is
+    kept), never lossy — skipped tiles provably read no changed source.
+    """
+    n, r_blocks, t_tiles, wc = coverage_m.shape
+    t_idx = jax.lax.broadcasted_iota(jnp.int32, (n, r_blocks, t_tiles), 2)
+    real = t_idx < counts_m[..., None]
+
+    def dynamic(_):
+        nz = gathered_words != jnp.uint32(0)  # (Wg,) word-activity bits
+        pad = wc * WORD_BITS - nz.shape[0]
+        nzp = jnp.pad(nz, (0, pad)) if pad else nz
+        packed = pack_bits(nzp)  # (Wc,) uint32
+        hit = jnp.any((coverage_m & packed) != jnp.uint32(0), axis=-1)
+        return jnp.logical_and(real, hit)
+
+    if use_dense is None:
+        return dynamic(None)
+    return jax.lax.cond(use_dense, lambda _: real, dynamic, None)
+
+
+def active_fetch_map(active: jnp.ndarray) -> jnp.ndarray:
+    """Active mask -> the scalar-prefetched fetch map the kernel consumes:
+    ``fetch[..., t]`` is the index of the last active tile at or before
+    ``t`` (-1 before the first). The kernel runs tile ``t`` iff
+    ``fetch[t] == t``; skipped grid steps re-name the previous active block
+    so the pipeline never re-DMAs for them (same elision trick as the
+    static tile-count clamp)."""
+    t_idx = jax.lax.broadcasted_iota(jnp.int32, active.shape, active.ndim - 1)
+    marked = jnp.where(active, t_idx, jnp.int32(-1))
+    return jax.lax.cummax(marked, axis=active.ndim - 1)

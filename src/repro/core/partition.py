@@ -114,6 +114,12 @@ class PartitionedGraph:
     tile_counts: Optional[np.ndarray] = None  # (p, l, R) int32 real tiles per block
     tile_weights: Optional[np.ndarray] = None  # (p, l, R, T, Eb) f32 or None
     tile_row_pos: Optional[np.ndarray] = None  # (p, l, Vl) int32 or None
+    # per-tile source-coverage bitmaps (frontier-aware dynamic skipping):
+    # bit j of tile (i, m, r, t)'s word set iff the tile reads a source in
+    # frontier word j of phase m's gathered block. Wc = ceil(p * Ws / 32)
+    # with Ws = ceil(sub_size / 32) — see core/frontier_words.py and
+    # docs/tile_layout.md §7 for the shared layout contract.
+    tile_coverage: Optional[np.ndarray] = None  # (p, l, R, T, Wc) uint32
     tile_vb: int = 0  # row-block height (0 = tiles not built)
     src_bits: int = 0  # packed-word regime: 16 or 32 (0 = tiles not built)
     # hub-row splitting (two-level reduce). When any bucket split a row,
@@ -217,7 +223,12 @@ class PartitionedGraph:
         ``problem``: when given, the weight stream is dropped unless the
         problem's map UDF consumes it (``edge_op == 'add'``) — the kernel
         then adds unit weight in registers. This is THE weight-streaming
-        rule; both engines get it from here so they cannot drift.
+        rule; both engines get it from here so they cannot drift. The
+        coverage bitmaps follow the same rule: they are dropped unless the
+        problem's reduce is ``min`` — frontier skipping is only sound for
+        monotone min problems (a skipped tile's sources re-contribute values
+        already merged into the labels), while a sum reduce needs EVERY
+        contribution every iteration, so PageRank streams dense.
         """
         if self.tile_word is None:
             raise ValueError(
@@ -231,10 +242,22 @@ class PartitionedGraph:
             "w": self.tile_weights,  # (p, l, R, T, Eb) f32 | None
             "row_pos": self.tile_row_pos,  # (p, l, Vl) | None
             "split_map": self.tile_split_map,  # (p, l, Vl, S_max) | None
+            "coverage": self.tile_coverage,  # (p, l, R, T, Wc) u32 | None
         }
         if problem is not None and problem.edge_op != "add":
             arrs["w"] = None
+        if problem is not None and problem.reduce_kind != "min":
+            arrs["coverage"] = None
         return arrs
+
+    @property
+    def coverage_bytes_per_edge(self) -> float:
+        """Index-stream overhead of the coverage metadata, amortized per edge
+        slot: Wc words per (Eb-slot) tile — e.g. 1/32 B/edge at Eb=128,
+        Wc=1 — vs the 4-8 B/edge packed words it lets the engine skip."""
+        if self.tile_coverage is None or self.tile_word is None:
+            return 0.0
+        return 4.0 * self.tile_coverage.size / max(self.tile_word.size, 1)
 
     @property
     def t_max_reduction(self) -> float:
@@ -384,6 +407,7 @@ def _build_tile_layouts(p, l, vpc, src_gidx, dst_lidx, valid, weights, cfg, sub_
         prepare_tiles,
         split_map_from_row_orig,
         stack_packed_tiles,
+        tile_coverage_words,
     )
 
     vb = cfg.tile_vb if cfg.tile_vb is not None else sub_size
@@ -419,6 +443,9 @@ def _build_tile_layouts(p, l, vpc, src_gidx, dst_lidx, valid, weights, cfg, sub_
     tile_counts = counts.reshape(p, l, r_blocks)
     tile_weights = (
         wts.reshape(p, l, r_blocks, t_max, eb) if wts is not None else None
+    )
+    tile_coverage = tile_coverage_words(
+        tile_word, tile_word_hi, src_bits=src_bits, p=p, sub_size=sub_size
     )
     any_split = any(t.row_orig is not None for row in layouts for t in row)
     tile_row_pos = tile_row_orig = tile_split_map = None
@@ -464,6 +491,7 @@ def _build_tile_layouts(p, l, vpc, src_gidx, dst_lidx, valid, weights, cfg, sub_
         tile_counts=tile_counts,
         tile_weights=tile_weights,
         tile_row_pos=tile_row_pos,
+        tile_coverage=tile_coverage,
         tile_vb=vb,
         src_bits=src_bits,
         tile_row_orig=tile_row_orig,

@@ -21,6 +21,7 @@ __all__ = [
     "batched_molecules",
     "random_positions_distances",
     "skewed_graph",
+    "path_grid_graph",
 ]
 
 
@@ -77,6 +78,47 @@ def skewed_graph(
         raise ValueError(f"kind must be 'star' or 'powerlaw', got {kind!r}")
     order = rng.permutation(src.shape[0])
     return COOGraph(src=src[order], dst=dst[order], num_vertices=n)
+
+
+def path_grid_graph(
+    width: int,
+    height: int = 1,
+    *,
+    shuffle: bool = False,
+    seed: int = 0,
+):
+    """High-diameter COOGraph for the frontier-aware dynamic-skip perf path.
+
+    A ``width`` x ``height`` grid with bidirectional nearest-neighbour edges
+    (``height=1`` degenerates to a simple path). BFS/SSSP from a corner takes
+    ~``width + height`` iterations with a frontier that is a thin wavefront —
+    the regime where per-iteration dead-tile skipping dwarfs the static
+    padding-tile skip (most tiles hold only vertices far from the wave).
+
+    ``shuffle=True`` applies a random permutation to the vertex ids. On the
+    id-ordered grid the wavefront is contiguous, so it occupies few source
+    sub-intervals and label-propagation problems (WCC) converge along the id
+    order; shuffling scatters the frontier across tiles, exercising the
+    coverage-bitmap test rather than the easy contiguous case.
+
+    Deterministic in ``seed``. Returns a ``repro.core.graph.COOGraph``.
+    """
+    from repro.core.graph import COOGraph
+
+    n = width * height
+    vid = np.arange(n, dtype=np.uint32).reshape(height, width)
+    right = np.stack([vid[:, :-1].ravel(), vid[:, 1:].ravel()])
+    down = np.stack([vid[:-1, :].ravel(), vid[1:, :].ravel()])
+    a = np.concatenate([right[0], down[0]])
+    b = np.concatenate([right[1], down[1]])
+    src = np.concatenate([a, b])
+    dst = np.concatenate([b, a])
+    if shuffle:
+        perm = np.random.default_rng(
+            np.random.SeedSequence([seed, width, height])
+        ).permutation(n).astype(np.uint32)
+        src, dst = perm[src], perm[dst]
+    return COOGraph(src=src, dst=dst, num_vertices=n)
 
 
 def lm_batch(seed: int, step: int, batch: int, seq: int, vocab: int) -> Dict[str, np.ndarray]:

@@ -192,6 +192,7 @@ def gather_reduce_cores_pallas(
     counts: jnp.ndarray,  # (p, R) int32 real edge tiles per (core, row block)
     word_hi: jnp.ndarray | None = None,  # (p, R, T, Eb) int32, src_bits=32 only
     weights: jnp.ndarray | None = None,  # (p, R, T, Eb) f32 (edge_op == 'add')
+    fetch: jnp.ndarray | None = None,  # (p, R, T) int32 dynamic fetch map
     *,
     num_rows: int,  # rows per core (= vertices_per_core)
     vb: int,
@@ -222,14 +223,29 @@ def gather_reduce_cores_pallas(
     ``identity`` written at t == 0, which is what makes spare slots safe for
     the combine). The engine folds the partials into natural rows afterwards
     with the problem's reduce op (level 2, ``combine_split_rows``).
+
+    Frontier-aware dynamic skipping: passing ``fetch`` (a traced (p, R, T)
+    int32 map, ``core.frontier_words.active_fetch_map`` of this iteration's
+    active-tile mask) REPLACES ``counts`` as the single scalar-prefetched
+    operand. ``fetch[c, r, t]`` names the last ACTIVE tile at or before t
+    (-1 before the first); the kernel runs tile t iff ``fetch[c, r, t] == t``
+    — which subsumes the static padding early-out, since the engine ANDs
+    the frontier hit mask with ``t < counts`` before building the map — and
+    the index map fetches block ``max(fetch[c, r, t], 0)``, so every skipped
+    grid step re-names an already-fetched block and costs no extra HBM
+    traffic (the same fetch-elision trick as the static clamp below). With
+    ``fetch=None`` behavior is bit-for-bit the static path.
     """
     p, r_blocks, t_tiles, eb = word.shape
     assert r_blocks * vb == num_rows, (word.shape, vb, num_rows)
     assert counts.shape == (p, r_blocks), (counts.shape, (p, r_blocks))
     assert (word_hi is not None) == (src_bits == 32), (src_bits, word_hi is None)
+    if fetch is not None:
+        assert fetch.shape == (p, r_blocks, t_tiles), fetch.shape
     g = payload.shape[0]
     has_hi = word_hi is not None
     has_w = weights is not None
+    has_fetch = fetch is not None
 
     def kern(cnt_ref, *refs):
         refs = list(refs)
@@ -243,7 +259,11 @@ def gather_reduce_cores_pallas(
         def _init():
             out_ref[...] = jnp.full_like(out_ref[...], identity)
 
-        @pl.when(t < cnt_ref[c, r])  # variable-T early-out: skip padding tiles
+        # variable-T early-out (static: skip padding tiles) or frontier
+        # early-out (dynamic: also skip real tiles with no active source)
+        run = cnt_ref[c, r, t] == t if has_fetch else t < cnt_ref[c, r]
+
+        @pl.when(run)
         def _work():
             wd = word_ref[0, 0, 0, :]
             hi = hi_ref[0, 0, 0, :] if hi_ref is not None else None
@@ -259,8 +279,13 @@ def gather_reduce_cores_pallas(
     # pipeline still DMAs whatever block the index map names. Clamping the
     # tile index at the last real tile makes every skipped grid step revisit
     # the previous block, which the pipeline recognizes and does not re-fetch,
-    # so padding tiles cost no HBM traffic on compiled TPU either.
+    # so padding tiles cost no HBM traffic on compiled TPU either. The
+    # dynamic fetch map generalizes the clamp: skipped steps re-name the
+    # LAST ACTIVE block (cummax of active tile indices), preserving the
+    # no-refetch property under arbitrary per-iteration skip patterns.
     def edge_idx(c, r, t, cnt):
+        if has_fetch:
+            return (c, r, jnp.maximum(cnt[c, r, t], 0), 0)
         return (c, r, jnp.minimum(t, jnp.maximum(cnt[c, r] - 1, 0)), 0)
 
     edge_block = pl.BlockSpec((1, 1, 1, eb), edge_idx)
@@ -292,4 +317,4 @@ def gather_reduce_cores_pallas(
         )
         if not interpret
         else None,
-    )(counts.astype(jnp.int32), *args)
+    )((fetch if has_fetch else counts).astype(jnp.int32), *args)

@@ -32,6 +32,7 @@ __all__ = [
     "choose_src_bits",
     "pack_edge_words",
     "stack_packed_tiles",
+    "tile_coverage_words",
     "split_map_from_row_orig",
     "combine_split_rows",
     "gather_reduce",
@@ -128,6 +129,53 @@ def stack_packed_tiles(
         if weights is not None and t.weights is not None:
             weights[i, :rr, :tt] = t.weights
     return word, word_hi, counts, weights
+
+
+def tile_coverage_words(
+    word: np.ndarray,  # (..., Eb) int32 packed edge words (one tile per row)
+    word_hi: np.ndarray | None,  # (..., Eb) int32 in the 32-bit regime
+    *,
+    src_bits: int,
+    p: int,
+    sub_size: int,
+) -> np.ndarray:
+    """Per-tile source-coverage bitmaps for frontier-aware dynamic skipping.
+
+    Decodes each tile's packed words (numpy, partition time — the ONLY place
+    the compressed stream is ever unpacked outside the kernel) and records, at
+    frontier-WORD granularity, which 32-source groups of the phase's gathered
+    block the tile reads: coverage bit ``j`` is set iff some valid edge's
+    gathered src index lands in frontier word ``j`` (``j = src_core * Ws +
+    (src mod sub_size) // 32`` with ``Ws = ceil(sub_size / 32)`` — the layout
+    contract shared with ``core.frontier_words``). Returns (..., Wc) uint32
+    with ``Wc = ceil(p * Ws / 32)``: 32x smaller than per-source bitmaps, and
+    conservative only — a tile whose coverage misses every live frontier word
+    provably reads no changed source. All-invalid (padding) tiles get
+    all-zero coverage, so they stay dead under any frontier.
+    """
+    word = np.asarray(word)
+    ws = -(-sub_size // 32)
+    wc = -(-(p * ws) // 32)
+    if src_bits == 16:
+        valid = word < 0
+        src = (word.view(np.uint32) & np.uint32(0xFFFF)).astype(np.int64)
+    else:
+        valid = np.asarray(word_hi) < 0
+        src = word.view(np.uint32).astype(np.int64)
+    # gathered index -> frontier-word slot in the phase's gathered block
+    widx = (src // sub_size) * ws + (src % sub_size) // 32
+    lead = word.shape[:-1]
+    cov = np.zeros(lead + (wc,), dtype=np.uint32)
+    flat = cov.reshape(-1, wc)
+    tile_of_slot = np.repeat(np.arange(flat.shape[0]), word.shape[-1])
+    keep = valid.reshape(-1)
+    ti, wsel = tile_of_slot[keep], widx.reshape(-1)[keep]
+    np.bitwise_or.at(
+        flat,
+        (ti, wsel // 32),
+        np.left_shift(np.uint32(1), (wsel % 32).astype(np.uint32)),
+    )
+    return cov
 
 
 @dataclasses.dataclass(frozen=True)

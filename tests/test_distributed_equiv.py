@@ -107,6 +107,37 @@ print("OK")
     )
 
 
+def test_distributed_dynamic_skip_matches_static_and_oracle():
+    """Frontier-aware dynamic scheduling under channel sharding: the
+    per-channel frontier words ride the crossbar, every device takes the same
+    density-switch branch, and results + iteration counts stay bit-identical
+    to both the static distributed schedule and the XLA oracle. The frontier
+    engine (its changed-mask doubling as the exact live frontier) reaches the
+    same fixed point."""
+    run_sub(
+        PRELUDE
+        + """
+from repro.core.frontier import run_distributed_frontier
+
+g = G.symmetrize(G.rmat(10, 6, seed=11))
+pg = partition_2d(g, PartitionConfig(p=4, l=2, lane=4, stride=100))
+assert pg.tile_coverage is not None
+static = EngineOptions(dynamic_tile_skip=False)
+for prob in (bfs(2), wcc(), sssp(2)):
+    x = run(prob, g, pg, EngineOptions(backend="xla"))
+    d = run_distributed(prob, g, pg, mesh4)  # dynamic_tile_skip defaults on
+    s = run_distributed(prob, g, pg, mesh4, opts=static)
+    assert np.array_equal(d.labels["label"], x.labels["label"]), prob.name
+    assert np.array_equal(s.labels["label"], x.labels["label"]), prob.name
+    assert d.iterations == s.iterations == x.iterations, (
+        prob.name, d.iterations, s.iterations, x.iterations)
+    f, stats = run_distributed_frontier(prob, g, pg, mesh4, budget=64)
+    assert np.array_equal(f.labels["label"], x.labels["label"]), prob.name
+print("OK")
+"""
+    )
+
+
 def test_distributed_streams_packed_words_only():
     """Structural proof (acceptance): the traced distributed program's inputs
     are the packed word/count (+ split-map) arrays, each device's sub-jaxpr
