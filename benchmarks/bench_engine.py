@@ -50,8 +50,8 @@ import repro.core.graph as G
 from benchmarks.common import mteps, time_call
 from repro.core.engine import EngineOptions, run, run_frontier_trace
 from repro.core.partition import PartitionConfig, partition_2d
-from repro.core.problems import bfs, pagerank, wcc
-from repro.data.synthetic import path_grid_graph, skewed_graph
+from repro.core.problems import bfs, bfs_multi, pagerank, wcc
+from repro.data.synthetic import path_grid_graph, query_workload, skewed_graph
 
 JSON_PATH = pathlib.Path(__file__).resolve().parent.parent / "BENCH_engine.json"
 
@@ -266,6 +266,99 @@ def _bench_highdiam(emit, records):
 
 
 # ---------------------------------------------------------------------------
+# multi-query suite (ISSUE 7): lane-batched BFS at K queries per compressed
+# edge-stream pass vs K single-query runs. The batched run decodes every tile
+# word EXACTLY as often as a K=1 run (the stream carries no lane dim —
+# jaxpr-asserted in tests/test_multi_query.py); only the label payload widens
+# to ceil(K/32) packed words, so per-query amortized throughput scales ~K.
+# ---------------------------------------------------------------------------
+
+MULTI_K = (1, 8, 64)
+
+# metric keys every multi-query record must carry (asserted by --smoke / CI)
+MULTI_METRIC_KEYS = (
+    "K", "batched_us", "sequential_warm_us", "per_query_speedup",
+    "batched_per_query_mteps", "sequential_per_query_mteps",
+    "batched_stream_passes", "sequential_stream_passes", "passes_saved",
+    "agreement",
+)
+
+
+def multi_query_record(g, pg, roots, k, time_fn, sequential_sample=None):
+    """One K point: batched bfs_multi vs K single-root bfs runs on the SAME
+    partition. ``sequential_sample`` caps how many distinct single-root jits
+    are compiled for the warm baseline (smoke mode); None runs all K honestly.
+    Both sides are timed WARM (compile excluded — conservative in favor of the
+    sequential baseline, which in real serving also retraces per root)."""
+    opts = EngineOptions(backend="pallas")
+    chunk = [int(r) for r in roots[:k]]
+    prob = bfs_multi(chunk)
+    res_b = run(prob, g, pg, opts)  # compile + correctness reference
+    t_batch = time_fn(lambda: run(prob, g, pg, opts))
+
+    sample = chunk if sequential_sample is None else chunk[:sequential_sample]
+    seq_probs = [bfs(r) for r in sample]
+    cold = 0.0
+    seq_iters = []
+    agree = True
+    dist = np.asarray(res_b.labels["dist"])
+    for j, sp in enumerate(seq_probs):
+        t0 = time_call(lambda: run(sp, g, pg, opts), warmup=0, iters=1)
+        cold += t0  # first call pays trace+compile: the real per-root serving cost
+        r = run(sp, g, pg, opts)
+        seq_iters.append(r.iterations)
+        agree = agree and bool(np.array_equal(dist[:, j], r.labels["label"]))
+    t_seq_warm = time_fn(
+        lambda: [run(sp, g, pg, opts) for sp in seq_probs]
+    ) * (k / len(seq_probs))
+    seq_passes = int(np.sum(seq_iters) * (k / len(seq_probs)))
+    return {
+        "K": k,
+        "batched_us": t_batch * 1e6,
+        "batched_iters": res_b.iterations,
+        "sequential_warm_us": t_seq_warm * 1e6,
+        "sequential_cold_us": cold * (k / len(seq_probs)) * 1e6,
+        "sequential_sampled": len(seq_probs),
+        "per_query_speedup": t_seq_warm / t_batch,
+        "batched_per_query_mteps": mteps(g.num_edges * k, t_batch),
+        "sequential_per_query_mteps": mteps(g.num_edges * k, t_seq_warm),
+        "batched_stream_passes": res_b.iterations,
+        "sequential_stream_passes": seq_passes,
+        "passes_saved": seq_passes - res_b.iterations,
+        "agreement": agree,
+    }
+
+
+def _bench_multi_query(emit, records):
+    s, d, _ = SCALES["rmat11"]
+    g = G.symmetrize(G.rmat(s, d, seed=1))
+    pg = partition_2d(g, PartitionConfig(p=4, l=4, lane=8, stride=100))
+    roots = query_workload(max(MULTI_K), g.num_vertices, seed=0)
+    row = {"graph": "rmat11", "problem": "bfs_multi", "V": g.num_vertices,
+           "E": g.num_edges, "p": pg.p, "l": pg.l,
+           "stream_bytes_per_edge": pg.stream_bytes_per_edge,
+           "points": []}
+    for k in MULTI_K:
+        rec = multi_query_record(g, pg, roots, k, time_call)
+        row["points"].append(rec)
+        emit(
+            f"engine/multi-query/K={k}",
+            rec["batched_us"],
+            f"speedup={rec['per_query_speedup']:.1f}x "
+            f"mteps/q={rec['batched_per_query_mteps']:.1f} "
+            f"passes={rec['batched_stream_passes']}/{rec['sequential_stream_passes']} "
+            f"agree={rec['agreement']}",
+        )
+    k64 = next(r for r in row["points"] if r["K"] == 64)
+    assert k64["agreement"], k64
+    assert k64["per_query_speedup"] >= 2.0, (
+        f"K=64 lane batching must amortize >= 2x per query, got "
+        f"{k64['per_query_speedup']:.2f}x"
+    )
+    records.append(row)
+
+
+# ---------------------------------------------------------------------------
 # channel-scaling sweep: the distributed engine at 1/2/4/8 simulated memory
 # channels. Each count runs in a subprocess (jax locks the device count), the
 # parent merges the per-channel JSON records.
@@ -362,6 +455,7 @@ def main(emit):
     _bench_scales(emit, records)
     _bench_skew(emit, records)
     _bench_highdiam(emit, records)
+    _bench_multi_query(emit, records)
     channel_records = []
     _bench_channels(emit, channel_records)
     assert all(
@@ -420,6 +514,29 @@ def smoke(emit):
         "engine/smoke-dynamic", 0.0,
         f"bfs_dyn_skip={hd['dynamic']['bfs']['mean_dynamic_skipped_tile_fraction']:.3f} "
         f"static_skip={hd['skipped_tile_fraction']:.3f} agreement=ok",
+    )
+    # one K=64 lane-batching point (ISSUE 7): the batched run must amortize
+    # to >= 2x the per-query throughput of single-root runs on the SAME
+    # partition — both sides warm, interpret-mode. The sequential baseline
+    # samples 6 distinct roots (6 single-root compiles keep smoke fast); the
+    # full 64-root honest sweep runs in the non-smoke bench.
+    mg = G.symmetrize(G.rmat(8, 8, seed=1))
+    mpg = partition_2d(mg, PartitionConfig(p=2, l=2, lane=8))
+    mroots = query_workload(64, mg.num_vertices, seed=0)
+    mrec = multi_query_record(mg, mpg, mroots, 64, time_call,
+                              sequential_sample=6)
+    for key in MULTI_METRIC_KEYS:
+        assert key in mrec, f"missing multi-query metric {key!r}"
+    assert mrec["agreement"], "lane-batched labels diverged from single runs"
+    assert mrec["per_query_speedup"] >= 2.0, (
+        f"K=64 lane batching must amortize >= 2x per query, got "
+        f"{mrec['per_query_speedup']:.2f}x"
+    )
+    emit(
+        "engine/smoke-multi-query", mrec["batched_us"],
+        f"K=64 speedup={mrec['per_query_speedup']:.1f}x "
+        f"passes={mrec['batched_stream_passes']}/{mrec['sequential_stream_passes']} "
+        f"agreement=ok",
     )
     # one multi-channel point: 2 simulated channels, small graph
     rec = _spawn_channel_child(2, extra_args=("--channel-scale", "8"))

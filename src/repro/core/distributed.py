@@ -25,6 +25,16 @@ The engine is numerically the single-process engine run with p remote
 channels: min problems are bit-identical, sum problems (PageRank) agree to
 float reassociation (tested in tests/test_distributed_equiv.py — the
 equivalence suite that keeps this docstring honest).
+
+Multi-query lane batching rides through unchanged (docs/tile_layout.md §8):
+a lane-batched label shard is (1, Vl, L) — the squeeze/re-expand rules and
+the axis-0 ``crossbar_exchange`` are lane-oblivious, so each phase
+all-gathers (sub, L) payload rows and one ``channel_phase_reduce_pallas``
+launch per channel updates all K queries. The dynamic-skip frontier words
+are the UNION over lanes (built inside ``make_iteration``), and both the
+density popcount and the convergence check are psum'd exactly as in the
+laneless engine, so every channel takes the same branch while individual
+lanes converge at different iterations (tests/test_multi_query.py).
 """
 from __future__ import annotations
 

@@ -62,6 +62,18 @@ dynamic schedule BIT-IDENTICAL per iteration to the dense async schedule
 (monotone-min argument: every skipped tile's sources are unchanged since the
 tile last ran, so its contributions are already merged) — same labels, same
 iteration counts, just fewer tiles streamed.
+
+Multi-query lane batching (docs/tile_layout.md §8): a ``Problem`` with
+``lanes = K > 0`` carries a trailing lane axis on its payload — packed reach
+words for multi-source BFS (``reduce_kind='or'``), a (…, K) label block for
+SSSP/PPR — and one ``channel_phase_reduce_pallas`` launch updates all K
+queries per tile decode; the compressed 4 B/edge word stream is fetched once
+per tile regardless of K. 'or' problems always execute the synchronous
+(level-synchronized) schedule — async multi-hop propagation within one
+iteration would corrupt the level counter that recovers hop distances — and
+stay eligible for dynamic tile skipping (OR is monotone like min); the
+frontier words are the UNION over lanes, so a converged lane stops
+contributing to the schedule without stopping the batch.
 """
 from __future__ import annotations
 
@@ -114,22 +126,30 @@ class EngineOptions:
     # almost nothing on a wide frontier). 0.0 = always dense (static
     # schedule via the dynamic carry); > 1.0 = never dense.
     dynamic_skip_density: float = 0.5
+    # multi-query lane batching: expected lane count K. None = accept whatever
+    # the problem declares (including laneless); an int pins the batch width —
+    # a mismatched problem raises, which is the serving loop's admission check
+    # that a batch was assembled to the width the jit cache is warm for.
+    lanes: int | None = None
 
     def __post_init__(self):
         if self.backend not in _BACKENDS:
             raise ValueError(f"backend must be one of {_BACKENDS}, got {self.backend!r}")
+        if self.lanes is not None and self.lanes < 0:
+            raise ValueError(f"lanes must be None or >= 0, got {self.lanes}")
 
 
 def dynamic_skip_enabled(problem, pg, opts: EngineOptions) -> bool:
-    """Frontier skipping is sound only for monotone min reduces (a skipped
-    tile's sources re-contribute values already merged); sum problems
-    (PageRank) need every contribution every iteration and stay dense. Also
-    requires the Pallas backend (the oracle materializes everything anyway)
-    and partition-time coverage bitmaps."""
+    """Frontier skipping is sound only for monotone reduces — min, and the
+    bitwise OR of packed multi-source BFS lanes (a skipped tile's sources
+    re-contribute values already merged); sum problems (PageRank) need every
+    contribution every iteration and stay dense. Also requires the Pallas
+    backend (the oracle materializes everything anyway) and partition-time
+    coverage bitmaps."""
     return bool(
         opts.dynamic_tile_skip
         and opts.backend == "pallas"
-        and problem.reduce_kind == "min"
+        and problem.reduce_kind in ("min", "or")
         and getattr(pg, "tile_coverage", None) is not None
     )
 
@@ -142,20 +162,24 @@ class EngineResult:
 
 
 def prepare_labels(problem: Problem, g, pg: PartitionedGraph) -> Dict[str, jnp.ndarray]:
-    """Init labels on host, apply stride permutation, reshape to (p, Vl)."""
+    """Init labels on host, apply stride permutation, reshape to (p, Vl).
+
+    Lane-batched label fields arrive as (padded, L) — K vector lanes or
+    packed reach words — and become (p, Vl, L): the permutation moves rows,
+    the lane axis rides along untouched."""
     padded = pg.padded_vertices
     labels = problem.init_labels(g, padded)
     out = {}
     for k, v in labels.items():
         v = np.asarray(v)
-        if v.ndim == 1 and v.shape[0] == padded:
+        if v.ndim in (1, 2) and v.shape[0] == padded:
             if pg.perm is not None:
                 # perm is a bijection on [0, V): every slot < V is re-assigned,
                 # slots >= V keep their natural padding init values.
                 moved = v.copy()
                 moved[pg.perm[: pg.num_vertices]] = v[: pg.num_vertices]
                 v = moved
-            v = v.reshape(pg.p, pg.vertices_per_core)
+            v = v.reshape(pg.p, pg.vertices_per_core, *v.shape[1:])
         out[k] = jnp.asarray(v)
     return out
 
@@ -167,8 +191,8 @@ def unpad_labels(
     out = {}
     for k, v in labels.items():
         v = np.asarray(v)
-        if v.ndim == 2 and v.shape == (pg.p, pg.vertices_per_core):
-            flat = v.reshape(-1)
+        if v.ndim in (2, 3) and v.shape[:2] == (pg.p, pg.vertices_per_core):
+            flat = v.reshape(pg.padded_vertices, *v.shape[2:])
             if pg.perm is not None:
                 flat = flat[pg.perm[: pg.num_vertices]]
             else:
@@ -190,6 +214,19 @@ def _segment_reduce(kind: str, contrib, dst, num_segments: int, identity):
         return jax.ops.segment_min(
             contrib, dst, num_segments=num_segments, indices_are_sorted=True
         )
+    if kind == "or":
+        # bitwise-OR segments by bit-plane decomposition: per bit, segment_max
+        # of the 0/1 plane (empty segments fill with uint32 min == 0, the OR
+        # identity). 32 segment ops — oracle-path only; the Pallas kernel does
+        # the word-OR directly.
+        out = jnp.zeros((num_segments,) + contrib.shape[1:], dtype=contrib.dtype)
+        for b in range(32):
+            plane = (contrib >> jnp.uint32(b)) & jnp.uint32(1)
+            mx = jax.ops.segment_max(
+                plane, dst, num_segments=num_segments, indices_are_sorted=True
+            )
+            out = out | (mx << jnp.uint32(b))
+        return out
     return jax.ops.segment_sum(
         contrib, dst, num_segments=num_segments, indices_are_sorted=True
     )
@@ -282,7 +319,10 @@ def channel_phase_reduce_pallas(problem, pg, gathered, cm, opts, active=None):
             identity=problem.identity,
         )
     elif cm["row_pos"] is not None:  # undo degree-aware row packing
-        reduced = jnp.take_along_axis(reduced, cm["row_pos"], axis=1)
+        pos = cm["row_pos"]
+        if reduced.ndim == 3:  # trailing lane axis: size-1 index broadcasts
+            pos = pos[..., None]
+        reduced = jnp.take_along_axis(reduced, pos, axis=1)
     return reduced
 
 
@@ -290,10 +330,13 @@ def channel_phase_reduce_xla(problem, pg, gathered, cm, opts):
     """Oracle form of the channel-local phase reduce: materialize (n, E_pad)
     contributions via take/where, then segment-reduce. ``cm`` holds the flat
     (n, E_pad) src/dst/valid slices of one phase."""
-    svals = jnp.take(gathered, cm["src"], axis=0)  # (n, E) crossbar label reads
+    svals = jnp.take(gathered, cm["src"], axis=0)  # (n, E[, L]) crossbar reads
     contrib = problem.edge_map(svals, cm["w"])
     identity = jnp.asarray(problem.identity, dtype=contrib.dtype)
-    contrib = jnp.where(cm["valid"], contrib, identity)
+    valid = cm["valid"]
+    if contrib.ndim > valid.ndim:  # trailing lane axis broadcasts
+        valid = valid[..., None]
+    contrib = jnp.where(valid, contrib, identity)
     return jax.vmap(
         lambda c, d: _segment_reduce(
             problem.reduce_kind, c, d, pg.vertices_per_core, identity
@@ -303,10 +346,11 @@ def channel_phase_reduce_xla(problem, pg, gathered, cm, opts):
 
 def _gather_local(problem, pg, labels, m):
     """Single-process crossbar: every core's phase-m sub-interval is a local
-    slice of the (p, Vl) payload — concatenating them IS the gathered block."""
-    payload = problem.src_transform(labels)  # (p, Vl) elementwise
+    slice of the (p, Vl[, L]) payload — concatenating them IS the gathered
+    block ((G,) laneless, (G, L) with a multi-query lane axis)."""
+    payload = problem.src_transform(labels)  # (p, Vl[, L]) elementwise
     sub = jax.lax.dynamic_slice_in_dim(payload, m * pg.sub_size, pg.sub_size, axis=1)
-    return sub.reshape(pg.gathered_size)  # (G,) scratch pads
+    return sub.reshape(pg.gathered_size, *payload.shape[2:])  # (G[, L])
 
 
 def _phase_reduce_pallas(problem, pg, consts, labels, m, opts, active=None):
@@ -362,6 +406,15 @@ def make_iteration(
     frontier words; ``density_fn(frontier) -> int32`` is the global frontier
     popcount for the density switch (distributed: psum over channels, so
     every device takes the same ``lax.cond`` branch)."""
+    if opts.lanes is not None and opts.lanes != problem.lanes:
+        raise ValueError(
+            f"EngineOptions.lanes={opts.lanes} but problem "
+            f"{problem.name!r} declares lanes={problem.lanes}"
+        )
+    # 'or' (packed multi-source BFS) always runs the level-synchronized
+    # schedule: its finalize recovers hop distances from a per-iteration
+    # level counter, which async multi-hop propagation would corrupt. Both
+    # immediate_updates settings therefore produce identical results.
     is_min = problem.reduce_kind == "min"
     dyn = dynamic_skip_enabled(problem, pg, opts)
     if reduce_at_phase is None:
@@ -404,7 +457,11 @@ def make_iteration(
             density_fn = fwords.frontier_popcount
 
     def _words_of(old, new):
-        return fwords.frontier_words_from_labels(old, new, pg.l, pg.sub_size)
+        # lane-batched labels carry a trailing lane axis: the frontier is the
+        # UNION over lanes (a tile streams iff any live query needs it).
+        return fwords.frontier_words_from_labels(
+            old, new, pg.l, pg.sub_size, lanes=problem.lanes > 0
+        )
 
     def _stats(active_tiles, use_dense):
         return {
@@ -488,6 +545,8 @@ def make_iteration(
                 reduced = reduce_at_phase(m, labels)
             if problem.reduce_kind == "min":
                 return jnp.minimum(acc, reduced.astype(acc.dtype)), n_act
+            if problem.reduce_kind == "or":
+                return acc | reduced.astype(acc.dtype), n_act
             return acc + reduced.astype(acc.dtype), n_act
 
         acc, n_act = jax.lax.fori_loop(0, pg.l, phase, (acc0, n_act0))
@@ -501,7 +560,13 @@ def make_iteration(
                     return new, nf, _stats(n_act, use_dense)
                 return new, nf
             return new
-        return problem.finalize(labels, acc)
+        new = problem.finalize(labels, acc)
+        if dynamic:  # 'or' problems: monotone, so frontier scheduling applies
+            nf = _words_of(lab, new[problem.merge_field])
+            if with_stats:
+                return new, nf, _stats(n_act, use_dense)
+            return new, nf
+        return new
 
     return iteration
 
@@ -574,9 +639,20 @@ def _wrap(obj):
 
 
 def run(
-    problem: Problem, g, pg: PartitionedGraph, opts: EngineOptions = EngineOptions()
+    problem: Problem,
+    g,
+    pg: PartitionedGraph,
+    opts: EngineOptions = EngineOptions(),
+    labels: Dict[str, jnp.ndarray] | None = None,
 ) -> EngineResult:
-    labels = prepare_labels(problem, g, pg)
+    """Run ``problem`` to convergence. ``labels`` (a ``prepare_labels`` tree)
+    overrides the problem's own init — the serving loop's warm-cache hook: a
+    multi-query problem's traced computation depends only on its lane count,
+    never on the root VALUES (those live in the label init), so admission
+    batches reuse ONE template problem as the jit cache key and feed each
+    batch's roots through ``labels`` without retracing (launch/serve.py)."""
+    if labels is None:
+        labels = prepare_labels(problem, g, pg)
     # opts is a frozen dataclass of primitives: hashable BY VALUE, so fresh
     # EngineOptions() instances hit the jit cache (id-wrapping it caused a
     # recompile per call — caught because benchmarks timed compiles).

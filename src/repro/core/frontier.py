@@ -64,7 +64,12 @@ __all__ = ["run_distributed_frontier", "frontier_wire_bytes"]
 
 
 def _sparse_exchange(changed, payload_sub, cache_row, sub, axis, budget):
-    """Exchange changed entries only; returns (new cache row, overflowed?)."""
+    """Exchange changed entries only; returns (new cache row, overflowed?).
+
+    ``changed`` is a (sub,) per-VERTEX mask — for lane-batched payloads
+    (sub, L) it is the caller's union over lanes, and each exchanged entry
+    carries the vertex's whole L-wide payload row (one index word amortized
+    over L lane values)."""
     count = changed.sum()
     max_count = jax.lax.pmax(count, axis)
 
@@ -74,11 +79,11 @@ def _sparse_exchange(changed, payload_sub, cache_row, sub, axis, budget):
         idx = jnp.sort(idx)[:budget]  # changed indices first (padded with sub)
         vals = payload_sub[jnp.minimum(idx, sub - 1)]
         all_idx = jax.lax.all_gather(idx, axis, axis=0)  # (p, K)
-        all_vals = jax.lax.all_gather(vals, axis, axis=0)  # (p, K)
+        all_vals = jax.lax.all_gather(vals, axis, axis=0)  # (p, K[, L])
         p = all_idx.shape[0]
         base = jnp.arange(p, dtype=jnp.int32)[:, None] * sub
         flat_pos = jnp.where(all_idx < sub, base + all_idx, p * sub).reshape(-1)
-        flat_val = all_vals.reshape(-1)
+        flat_val = all_vals.reshape(-1, *all_vals.shape[2:])
         padded = jnp.concatenate([cache_row, cache_row[-1:]])
         padded = padded.at[flat_pos].set(flat_val)
         return padded[:-1]
@@ -158,10 +163,16 @@ def run_distributed_frontier(
                 payload = problem.src_transform(labels)
                 mine = jax.lax.dynamic_slice_in_dim(payload, m * sub, sub, axis=0)
                 prev_mine = jax.lax.dynamic_slice(
-                    cache, (m, my_core * sub), (1, sub)
+                    cache,
+                    (m, my_core * sub) + (0,) * (cache.ndim - 2),
+                    (1, sub) + cache.shape[2:],
                 )[0]
                 row = jax.lax.dynamic_index_in_dim(cache, m, axis=0, keepdims=False)
-                changed_src = mine != prev_mine  # changed since LAST broadcast
+                diff = mine != prev_mine  # changed since LAST broadcast
+                # lane-batched payloads (sub, K): a vertex is exchanged iff
+                # ANY lane changed — the union frontier, one (index, K-row)
+                # pair on the wire per changed vertex.
+                changed_src = diff.any(-1) if diff.ndim == 2 else diff
                 new_row, overflow, count = _sparse_exchange(
                     changed_src, mine, row, sub, axis, budget
                 )
@@ -230,8 +241,11 @@ def run_distributed_frontier(
         check_vma=False,
     )
     out, iters, changed, nsparse, nfull = jax.jit(fn)(sharded, *const_vals)
+    merge = np.asarray(out[problem.merge_field])
+    # per-vertex payload bytes: lane-batched labels ship the whole lane row
+    lane_w = merge.shape[-1] if problem.lanes > 0 else 1
     stats = frontier_wire_bytes(pg, int(nsparse), int(nfull), budget,
-                                np.dtype(np.asarray(out[problem.merge_field]).dtype).itemsize)
+                                merge.dtype.itemsize * lane_w)
     res = EngineResult(
         labels=unpad_labels({k: np.asarray(v) for k, v in out.items()}, pg),
         iterations=int(iters),

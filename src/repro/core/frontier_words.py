@@ -40,6 +40,7 @@ __all__ = [
     "frontier_words_from_labels",
     "full_frontier_words",
     "frontier_popcount",
+    "lane_popcounts",
     "frontier_active_tiles",
     "active_fetch_map",
 ]
@@ -72,15 +73,25 @@ def pack_bits(bits: jnp.ndarray) -> jnp.ndarray:
 
 
 def frontier_words_from_labels(
-    old: jnp.ndarray, new: jnp.ndarray, l: int, sub_size: int
+    old: jnp.ndarray, new: jnp.ndarray, l: int, sub_size: int, *,
+    lanes: bool = False,
 ) -> jnp.ndarray:
     """Label diff -> frontier words: (..., Vl) pair -> (..., l, Ws) uint32.
 
     This IS the convergence check: the run is converged iff every word is
     zero — for min problems it replaces ``problem.not_converged`` (the
     separate full label diff) for free.
+
+    ``lanes=True`` (multi-query batching, docs/tile_layout.md §8): the label
+    arrays carry a trailing lane axis (..., Vl, L) — K vector lanes or
+    packed reach words — and a vertex is frontier-active iff ANY lane's
+    value changed. The resulting words are the UNION of the per-lane
+    frontiers: the dynamic tile schedule streams a tile if any live query
+    still needs it, and a converged lane (no diffs) contributes nothing.
     """
-    changed = old != new  # (..., Vl)
+    changed = old != new  # (..., Vl[, L])
+    if lanes:
+        changed = changed.any(axis=-1)  # union over lanes
     *lead, vl = changed.shape
     assert vl == l * sub_size, (vl, l, sub_size)
     changed = changed.reshape(*lead, l, sub_size)
@@ -111,6 +122,16 @@ def frontier_popcount(frontier: jnp.ndarray) -> jnp.ndarray:
     """Total set bits (int32 scalar) — the density-switch statistic. Callers
     with a sharded frontier psum this over the channel axis."""
     return jax.lax.population_count(frontier).astype(jnp.int32).sum()
+
+
+def lane_popcounts(changed_lanes: jnp.ndarray) -> jnp.ndarray:
+    """Per-lane frontier sizes: (..., K) bool change mask -> (K,) int32
+    changed-vertex counts (summed over all leading axes). Multi-query
+    observability statistic (``problem.not_converged_lanes`` is its
+    boolean projection); distributed callers psum it over the channel axis
+    so every channel observes identical per-lane liveness."""
+    k = changed_lanes.shape[-1]
+    return changed_lanes.reshape(-1, k).sum(axis=0, dtype=jnp.int32)
 
 
 def frontier_active_tiles(

@@ -246,7 +246,9 @@ class PartitionedGraph:
         }
         if problem is not None and problem.edge_op != "add":
             arrs["w"] = None
-        if problem is not None and problem.reduce_kind != "min":
+        # frontier coverage is only sound for monotone reduces: min and the
+        # packed multi-source-BFS word OR. Sum problems must stay dense.
+        if problem is not None and problem.reduce_kind not in ("min", "or"):
             arrs["coverage"] = None
         return arrs
 

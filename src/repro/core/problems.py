@@ -19,28 +19,62 @@ accumulator:
 
 Labels are dicts of (…, Vl) arrays so problems may carry auxiliary per-vertex
 state (e.g. PR's inverse out-degree) without the engine knowing.
+
+Multi-query lane batching (docs/tile_layout.md §8): a problem with
+``lanes = K > 0`` answers K point queries in one engine run by giving the
+exchanged payload a trailing lane axis. Two layouts:
+
+  * **packed** (``bfs_multi``) — the payload is a bitmap of "reached by query
+    k", 32 lanes per uint32 word, and the reduce is bitwise OR
+    (``reduce_kind='or'``). A K=64 batch widens the payload by just 2 words
+    per vertex; the compressed 4 B/edge index stream is untouched.
+  * **vector** (``sssp_multi``/``ppr_multi``) — the payload is a (…, K) label
+    block; min/sum reduces vectorize over the lane axis.
+
+``not_converged_lanes`` exposes the per-lane live mask; a converged lane's
+labels stop changing, so it drops out of the (union) frontier words and the
+dynamic tile schedule automatically — no per-lane control flow needed.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, Optional
+from typing import Callable, Dict, Optional, Sequence
 
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.graph import COOGraph, out_degrees
 
-__all__ = ["Problem", "bfs", "wcc", "sssp", "pagerank", "INF_U32"]
+__all__ = [
+    "Problem",
+    "bfs",
+    "wcc",
+    "sssp",
+    "pagerank",
+    "bfs_multi",
+    "sssp_multi",
+    "ppr_multi",
+    "lane_bits",
+    "INF_U32",
+]
 
 INF_U32 = np.uint32(0xFFFFFFFF)
 
 LabelTree = Dict[str, jnp.ndarray]
 
 
+def lane_bits(words: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Unpack the trailing packed-word axis (…, W) uint32 into (…, k) bools
+    (little-endian bit order, matching ``frontier_words.pack_bits``)."""
+    lane = jnp.arange(k, dtype=jnp.uint32)
+    w = jnp.take(words, lane // jnp.uint32(32), axis=-1)
+    return (w >> (lane % jnp.uint32(32))) & jnp.uint32(1) != 0
+
+
 @dataclasses.dataclass(frozen=True)
 class Problem:
     name: str
-    reduce_kind: str  # 'min' | 'sum'
+    reduce_kind: str  # 'min' | 'sum' | 'or'
     # host-side: build initial (padded) label tree given padded size & graph
     init_labels: Callable[[COOGraph, int], Dict[str, np.ndarray]]
     # device-side map UDF, source half: label sub-tree -> exchanged payload
@@ -61,6 +95,17 @@ class Problem:
     # which label field is merged by min-problems
     merge_field: str = "label"
     tol: float = 1e-6
+    # multi-query lane batching: number of concurrent queries (0 = laneless
+    # single query). When > 0 the ``merge_field`` array carries a trailing
+    # lane axis — K for 'vector' layout, ceil(K/32) packed words for 'packed'.
+    lanes: int = 0
+    lane_layout: str = ""  # '' | 'packed' | 'vector'
+    # per-lane convergence: (old, new) -> (K,) bool mask (True = lane live).
+    # Observability only — finished lanes already stop contributing because
+    # their labels freeze and drop out of the union frontier words.
+    not_converged_lanes: Optional[
+        Callable[[LabelTree, LabelTree], jnp.ndarray]
+    ] = None
 
     def payload_dtype(self, labels: Dict[str, np.ndarray]):
         return labels[self.merge_field].dtype
@@ -199,4 +244,170 @@ def pagerank(damping: float = 0.85, tol: float = 1e-6) -> Problem:
         finalize=finalize,
         not_converged=not_conv,
         tol=tol,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Multi-query lane-batched constructors (docs/tile_layout.md §8).
+# ---------------------------------------------------------------------------
+
+
+def bfs_multi(roots: Sequence[int]) -> Problem:
+    """K-source BFS with bit-packed lanes: payload word w of vertex v has bit
+    (k % 32) set iff query ``roots[k]`` has reached v (the classic multi-
+    source BFS bitmap trick). The reduce is bitwise OR over the compressed
+    edge stream; hop distances are recovered level-synchronously in
+    ``finalize`` from the newly-set bits, so the final ``dist[:, k]`` is
+    bit-identical to a single-query ``bfs(roots[k])`` run.
+
+    'or' problems always execute on the level-synchronized (accumulate +
+    finalize) schedule regardless of ``EngineOptions.immediate_updates`` —
+    async multi-hop propagation within one iteration would record wrong
+    levels. OR is monotone like min, so the frontier-word dynamic tile skip
+    stays sound (the active map is the union of the live per-lane frontiers).
+    """
+    roots = np.asarray(roots, dtype=np.int64)
+    k = int(roots.shape[0])
+    if not 1 <= k <= 1024:
+        raise ValueError(f"bfs_multi supports 1..1024 lanes, got {k}")
+    w = (k + 31) // 32
+
+    def init(g: COOGraph, padded: int):
+        if (roots < 0).any() or (roots >= g.num_vertices).any():
+            raise ValueError("bfs_multi root out of range")
+        reach = np.zeros((padded, w), dtype=np.uint32)
+        lane = np.arange(k)
+        bits = (np.uint32(1) << (lane % 32).astype(np.uint32)).astype(np.uint32)
+        # unbuffered |= : duplicate roots land in the same word and a plain
+        # fancy-index |= would keep only one lane's bit
+        np.bitwise_or.at(reach, (roots, lane // 32), bits)
+        dist = np.full((padded, k), INF_U32, dtype=np.uint32)
+        dist[roots, lane] = 0
+        return {"reach": reach, "dist": dist, "level": np.uint32(0)}
+
+    def finalize(labels: LabelTree, acc: jnp.ndarray) -> LabelTree:
+        reach = labels["reach"]
+        newly = acc & ~reach
+        level = labels["level"] + jnp.uint32(1)
+        hit = lane_bits(newly, k)
+        dist = jnp.where(hit, level, labels["dist"])
+        return {"reach": reach | newly, "dist": dist, "level": level}
+
+    def not_conv(old: LabelTree, new: LabelTree):
+        return jnp.any(old["reach"] != new["reach"])
+
+    def lanes_live(old: LabelTree, new: LabelTree):
+        diff = lane_bits(old["reach"] ^ new["reach"], k)
+        return jnp.any(diff.reshape(-1, k), axis=0)
+
+    return Problem(
+        name=f"bfs_multi[{k}]",
+        reduce_kind="or",
+        init_labels=init,
+        src_transform=lambda labels: labels["reach"],
+        edge_map=lambda z, w_: z,
+        identity=0.0,
+        finalize=finalize,
+        not_converged=not_conv,
+        merge_field="reach",
+        lanes=k,
+        lane_layout="packed",
+        not_converged_lanes=lanes_live,
+    )
+
+
+def sssp_multi(roots: Sequence[int]) -> Problem:
+    """K-source SSSP with a (…, K) vector label block: one min-plus reduce
+    over the edge stream updates all K distance columns per tile decode.
+    Column k is bit-identical to a single-query ``sssp(roots[k])`` run (the
+    min reduce broadcasts over lanes; no reassociation)."""
+    roots = np.asarray(roots, dtype=np.int64)
+    k = int(roots.shape[0])
+
+    def init(g: COOGraph, padded: int):
+        if (roots < 0).any() or (roots >= g.num_vertices).any():
+            raise ValueError("sssp_multi root out of range")
+        lab = np.full((padded, k), INF_F32, dtype=np.float32)
+        lab[roots, np.arange(k)] = 0.0
+        return {"label": lab}
+
+    def edge_map(z, w):
+        step = 1.0 if w is None else w[..., None]
+        return jnp.where(z >= INF_F32, z, z + step)
+
+    def not_conv(old: LabelTree, new: LabelTree):
+        return jnp.any(old["label"] != new["label"])
+
+    def lanes_live(old: LabelTree, new: LabelTree):
+        diff = old["label"] != new["label"]
+        return jnp.any(diff.reshape(-1, k), axis=0)
+
+    return Problem(
+        name=f"sssp_multi[{k}]",
+        reduce_kind="min",
+        init_labels=init,
+        src_transform=lambda labels: labels["label"],
+        edge_map=edge_map,
+        edge_op="add",
+        identity=float(INF_F32),
+        not_converged=not_conv,
+        lanes=k,
+        lane_layout="vector",
+        not_converged_lanes=lanes_live,
+    )
+
+
+def ppr_multi(
+    seeds: Sequence[int], damping: float = 0.85, tol: float = 1e-6
+) -> Problem:
+    """K-seed personalized PageRank, one (…, K) rank column per seed:
+        p_k <- (1-d) * e_k + d * A_pull p_k
+    The sum reduce is the same one-hot MXU matmul as single-query PR — the
+    lane axis just widens the payload operand of the dot."""
+    seeds = np.asarray(seeds, dtype=np.int64)
+    k = int(seeds.shape[0])
+
+    def init(g: COOGraph, padded: int):
+        if (seeds < 0).any() or (seeds >= g.num_vertices).any():
+            raise ValueError("ppr_multi seed out of range")
+        deg = out_degrees(g).astype(np.float32)
+        inv = np.zeros(padded, dtype=np.float32)
+        nz = deg > 0
+        inv[: g.num_vertices][nz] = 1.0 / deg[nz]
+        seed = np.zeros((padded, k), dtype=np.float32)
+        seed[seeds, np.arange(k)] = 1.0
+        mask = np.zeros(padded, dtype=np.float32)
+        mask[: g.num_vertices] = 1.0
+        return {"label": seed.copy(), "seed": seed, "inv_deg": inv, "mask": mask}
+
+    def src_transform(labels: LabelTree) -> jnp.ndarray:
+        return labels["label"] * labels["inv_deg"][..., None]
+
+    def finalize(labels: LabelTree, acc: jnp.ndarray) -> LabelTree:
+        new_rank = ((1.0 - damping) * labels["seed"] + damping * acc)
+        new_rank = new_rank * labels["mask"][..., None]
+        out = dict(labels)
+        out["label"] = new_rank
+        return out
+
+    def not_conv(old: LabelTree, new: LabelTree):
+        return jnp.max(jnp.abs(old["label"] - new["label"])) > tol
+
+    def lanes_live(old: LabelTree, new: LabelTree):
+        diff = jnp.abs(old["label"] - new["label"])
+        return jnp.max(diff.reshape(-1, k), axis=0) > tol
+
+    return Problem(
+        name=f"ppr_multi[{k}]",
+        reduce_kind="sum",
+        init_labels=init,
+        src_transform=src_transform,
+        edge_map=lambda z, w: z,
+        identity=0.0,
+        finalize=finalize,
+        not_converged=not_conv,
+        tol=tol,
+        lanes=k,
+        lane_layout="vector",
+        not_converged_lanes=lanes_live,
     )

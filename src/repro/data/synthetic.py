@@ -22,7 +22,62 @@ __all__ = [
     "random_positions_distances",
     "skewed_graph",
     "path_grid_graph",
+    "query_workload",
+    "admission_batches",
 ]
+
+
+def query_workload(
+    num_queries: int,
+    num_vertices: int,
+    *,
+    zipf_a: float = 1.2,
+    hot_fraction: float = 0.1,
+    seed: int = 0,
+) -> np.ndarray:
+    """Multi-root query stream for the lane-batched traversal path: root ids
+    for ``num_queries`` point queries (BFS roots / SSSP sources / PPR seeds)
+    with SKEWED root popularity — real query traffic concentrates on hub
+    entities, so admission batches contain duplicate roots and the packed
+    lane layout must stay correct under them (the bit-OR init regression).
+
+    A random ``hot_fraction`` of the vertex set forms the popularity-ranked
+    head; each query picks rank ``r ~ Zipf(zipf_a)`` (clamped into the head)
+    with probability ~rank^-a, so a handful of hot roots dominate while the
+    tail keeps full-vertex-range coverage. Deterministic in ``seed``;
+    returns (num_queries,) int64.
+    """
+    if num_vertices < 1 or num_queries < 1:
+        raise ValueError((num_queries, num_vertices))
+    rng = np.random.default_rng(
+        np.random.SeedSequence([seed, num_queries, num_vertices])
+    )
+    head = max(1, int(num_vertices * hot_fraction))
+    # popularity rank -> vertex id: a seeded permutation, so hot roots are
+    # scattered over the id space (and over graph cores / phases)
+    by_rank = rng.permutation(num_vertices)
+    ranks = np.minimum(rng.zipf(zipf_a, size=num_queries) - 1, head - 1)
+    return by_rank[ranks].astype(np.int64)
+
+
+def admission_batches(roots: np.ndarray, lanes: int) -> list:
+    """Chunk a query stream into K-lane admission batches for the serving
+    loop; the final partial batch is padded by repeating its last root
+    (duplicate lanes are cheap — same packed word — and keep the jit cache
+    warm at one batch width)."""
+    if lanes < 1:
+        raise ValueError(f"lanes must be >= 1, got {lanes}")
+    roots = np.asarray(roots)
+    out = []
+    for i in range(0, len(roots), lanes):
+        chunk = roots[i : i + lanes]
+        served = len(chunk)
+        if served < lanes:
+            chunk = np.concatenate(
+                [chunk, np.repeat(chunk[-1:], lanes - served)]
+            )
+        out.append((chunk, served))
+    return out
 
 
 def skewed_graph(

@@ -70,20 +70,48 @@ from jax.experimental.pallas import tpu as pltpu
 __all__ = ["gather_reduce_pallas", "gather_reduce_cores_pallas"]
 
 
+def _or_fold(x):
+    """Bitwise-OR reduce over axis 1 of (vb, n, L) by static halving — log2(n)
+    word-OR steps, no lax.reduce (registers only, Mosaic-friendly)."""
+    while x.shape[1] > 1:
+        n = x.shape[1]
+        h = n // 2
+        head = x[:, :h] | x[:, h : 2 * h]
+        x = jnp.concatenate([head, x[:, 2 * h :]], axis=1) if n % 2 else head
+    return x[:, 0]
+
+
 def _accumulate(kind: str, edge_op: str, payload, src, dstb, val, w, acc, identity, vb: int):
-    """Shared tile body: gather -> map -> segment-reduce -> merge into acc."""
-    vals = jnp.take(payload, src, axis=0)  # (Eb,) scratch-pad reads
+    """Shared tile body: gather -> map -> segment-reduce -> merge into acc.
+
+    Multi-query lanes (docs/tile_layout.md §8): ``payload`` may carry a
+    trailing lane axis (G, L) — K vector lanes for SSSP/PPR, ceil(K/32)
+    packed reach words for multi-source BFS. The gather, map, and reduce all
+    broadcast over it: the edge decode and the one-hot segment matrix are
+    built ONCE per tile regardless of L, so a K-query batch re-uses the same
+    4 B/edge index stream fetch."""
+    vals = jnp.take(payload, src, axis=0)  # (Eb,) or (Eb, L) scratch-pad reads
+    lanes = vals.ndim == 2
     ident = jnp.asarray(identity, vals.dtype)
     if edge_op == "add":  # saturating min-plus map (SSSP); w=None => unit weights
         step = w.astype(vals.dtype) if w is not None else jnp.asarray(1.0, vals.dtype)
+        if lanes and w is not None:
+            step = step[:, None]
         vals = jnp.where(vals >= ident, ident, vals + step)
-    vals = jnp.where(val, vals, ident)
+    vals = jnp.where(val[:, None] if lanes else val, vals, ident)
     rows = jax.lax.broadcasted_iota(jnp.int32, (vb, vals.shape[0]), 0)
     onehot = rows == dstb[None, :]
     if kind == "sum":
         contrib = jnp.dot(onehot.astype(vals.dtype), vals, precision=jax.lax.Precision.HIGHEST)
         return acc + contrib
-    masked = jnp.where(onehot, vals[None, :], ident)
+    if kind == "or":  # packed multi-source BFS reach words (identity = 0)
+        assert lanes, "'or' reduce requires a packed lane-word payload axis"
+        masked = jnp.where(onehot[:, :, None], vals[None, :, :], ident)
+        return acc | _or_fold(masked)
+    if lanes:
+        masked = jnp.where(onehot[:, :, None], vals[None, :, :], ident)
+    else:
+        masked = jnp.where(onehot, vals[None, :], ident)
     return jnp.minimum(acc, masked.min(axis=1))
 
 
@@ -243,6 +271,10 @@ def gather_reduce_cores_pallas(
     if fetch is not None:
         assert fetch.shape == (p, r_blocks, t_tiles), fetch.shape
     g = payload.shape[0]
+    # Trailing lane axis (multi-query batching): payload (G, L) -> output
+    # (p, num_rows, L). The word stream, counts/fetch map, and grid are
+    # UNCHANGED — one tile decode serves all L lane columns.
+    lane_dim = payload.shape[1] if payload.ndim == 2 else None
     has_hi = word_hi is not None
     has_w = weights is not None
     has_fetch = fetch is not None
@@ -269,8 +301,8 @@ def gather_reduce_cores_pallas(
             hi = hi_ref[0, 0, 0, :] if hi_ref is not None else None
             src, dstb, val = _unpack_word(wd, hi, src_bits)
             w = w_ref[0, 0, 0, :] if w_ref is not None else None
-            acc = out_ref[0, :]
-            out_ref[0, :] = _accumulate(
+            acc = out_ref[0]
+            out_ref[0] = _accumulate(
                 kind, edge_op, payload_ref[...], src, dstb, val, w, acc,
                 identity, vb,
             )
@@ -289,17 +321,25 @@ def gather_reduce_cores_pallas(
         return (c, r, jnp.minimum(t, jnp.maximum(cnt[c, r] - 1, 0)), 0)
 
     edge_block = pl.BlockSpec((1, 1, 1, eb), edge_idx)
+    if lane_dim is None:
+        payload_spec = pl.BlockSpec((g,), lambda c, r, t, cnt: (0,))
+        out_spec = pl.BlockSpec((1, vb), lambda c, r, t, cnt: (c, r))
+        out_shape = (p, num_rows)
+    else:  # scratch pad + output carry the lane axis whole
+        payload_spec = pl.BlockSpec((g, lane_dim), lambda c, r, t, cnt: (0, 0))
+        out_spec = pl.BlockSpec((1, vb, lane_dim), lambda c, r, t, cnt: (c, r, 0))
+        out_shape = (p, num_rows, lane_dim)
     in_specs = (
         [edge_block]
         + ([edge_block] if has_hi else [])
         + ([edge_block] if has_w else [])
-        + [pl.BlockSpec((g,), lambda c, r, t, cnt: (0,))]  # scratch pad resident
+        + [payload_spec]  # scratch pad resident
     )
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(p, r_blocks, t_tiles),
         in_specs=in_specs,
-        out_specs=pl.BlockSpec((1, vb), lambda c, r, t, cnt: (c, r)),
+        out_specs=out_spec,
     )
     args = (
         (word,)
@@ -310,7 +350,7 @@ def gather_reduce_cores_pallas(
     return pl.pallas_call(
         kern,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((p, num_rows), payload.dtype),
+        out_shape=jax.ShapeDtypeStruct(out_shape, payload.dtype),
         interpret=interpret,
         compiler_params=dict(
             mosaic=dict(dimension_semantics=("arbitrary", "arbitrary", "arbitrary"))

@@ -380,11 +380,11 @@ def split_map_from_row_orig(row_orig: np.ndarray, num_rows: int) -> np.ndarray:
 
 
 def combine_split_rows(
-    reduced: jnp.ndarray,  # (..., P) level-1 kernel output over packed rows
+    reduced: jnp.ndarray,  # (..., P[, K]) level-1 kernel output, packed rows
     split_map: jnp.ndarray,  # (..., num_rows, S) packed positions, -1 = pad
     *,
-    kind: str,  # 'min' | 'sum' — the problem's reduce UDF
-    identity: float,  # the SAME problem's identity (INF for min, 0 for sum)
+    kind: str,  # 'min' | 'sum' | 'or' — the problem's reduce UDF
+    identity: float,  # the SAME problem's identity (INF for min, 0 for sum/or)
 ) -> jnp.ndarray:
     """Level-2 reduce: fold virtual-row partials into natural rows.
 
@@ -393,12 +393,36 @@ def combine_split_rows(
     sum-problem sees exactly 0.0 — a split row is neither double-counted nor
     corrupted. Gather-based (static shapes, S_max is small), so min problems
     stay bit-identical to the oracle: min over partial mins == total min.
+
+    Lane-batched problems (docs/tile_layout.md §8) pass ``reduced`` with a
+    trailing lane axis (..., P, K); the fold is over the packed-row axis and
+    broadcasts per lane — one gather serves all K columns.
     """
     *lead, v, s = split_map.shape
     idx = jnp.maximum(split_map, 0)
-    vals = jnp.take_along_axis(reduced, idx.reshape(*lead, v * s), axis=-1)
     ident = jnp.asarray(identity, reduced.dtype)
+    if reduced.ndim == split_map.ndim:  # trailing lane axis (..., P, K)
+        k = reduced.shape[-1]
+        vals = jnp.take_along_axis(
+            reduced, idx.reshape(*lead, v * s, 1), axis=-2
+        )  # (..., v*s, K) — the size-1 index lane broadcasts over K
+        vals = vals.reshape(*lead, v, s, k)
+        vals = jnp.where(split_map[..., None] >= 0, vals, ident)
+        if kind == "min":
+            return jnp.min(vals, axis=-2)
+        if kind == "sum":
+            return jnp.sum(vals, axis=-2)
+        out = jnp.full(vals.shape[:-2] + (k,), ident, reduced.dtype)
+        for j in range(s):  # S_max is small & static: unrolled word-OR fold
+            out = out | vals[..., j, :]
+        return out
+    vals = jnp.take_along_axis(reduced, idx.reshape(*lead, v * s), axis=-1)
     vals = jnp.where(split_map >= 0, vals.reshape(split_map.shape), ident)
+    if kind == "or":
+        out = jnp.full(split_map.shape[:-1], ident, reduced.dtype)
+        for j in range(s):
+            out = out | vals[..., j]
+        return out
     return jnp.min(vals, axis=-1) if kind == "min" else jnp.sum(vals, axis=-1)
 
 

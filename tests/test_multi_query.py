@@ -1,0 +1,301 @@
+"""Multi-query lane batching (ISSUE 7): one compressed edge-stream pass
+answers K queries.
+
+Equivalence contract: lane k of a K-query run is BIT-IDENTICAL to the
+corresponding single-query run —
+
+  * packed layout (bfs_multi): reach bitmaps OR-reduce over the stream and
+    hop distances are recovered level-synchronously, so every dist column
+    matches ``bfs(root_k)`` exactly; ``immediate_updates`` True/False are
+    identical by construction ('or' always runs the synchronous schedule).
+  * vector layout (sssp_multi / ppr_multi): the trailing lane axis widens
+    the payload only. min broadcasts over lanes (bit-identical, sync AND
+    async); the PPR sum keeps per-lane summation order, so at a FIXED
+    iteration count lanes are bit-identical to K=1 runs (per-lane
+    convergence makes free-running tolerance runs stop at different
+    iterations — that is the feature, not a bug).
+
+Structural contract: the packed tile-word stream carries NO lane dimension —
+a K=64 iteration fetches each tile word exactly as often as K=1 (jaxpr-
+asserted below). Per-lane convergence: ``not_converged_lanes`` exposes which
+lanes are still live, and a converged lane's labels freeze (monotone
+reduces) while the batch keeps running for the rest.
+"""
+import numpy as np
+import pytest
+
+import jax
+
+import repro.core.graph as G
+from repro.core.engine import (
+    EngineOptions,
+    _make_iteration,
+    prepare_labels,
+    run,
+)
+from repro.core.partition import PartitionConfig, partition_2d
+from repro.core.problems import bfs, bfs_multi, ppr_multi, sssp, sssp_multi
+from repro.core.reference import bfs_reference
+from repro.data.synthetic import skewed_graph
+
+from test_distributed import PRELUDE, run_sub
+
+ROOTS = [3, 7, 0, 100, 3]  # deliberate duplicate: two lanes, same source
+
+
+def _bfs_graph():
+    return G.symmetrize(G.rmat(8, 6, seed=13))
+
+
+def _sssp_graph(seed=11):
+    rng = np.random.default_rng(seed)
+    g0 = G.rmat(8, 6, seed=seed)
+    w = (rng.random(g0.num_edges) + 0.1).astype(np.float32)
+    return G.COOGraph(src=g0.src, dst=g0.dst, num_vertices=g0.num_vertices,
+                      weights=w)
+
+
+# ---------------------------------------------------------------------------
+# packed lanes: bfs_multi
+# ---------------------------------------------------------------------------
+
+
+def test_bfs_multi_lanes_match_single_runs():
+    """Every dist column == the single-query run, duplicates included; the
+    XLA oracle and both immediate_updates settings agree bit-exactly ('or'
+    problems always run the level-synchronized schedule)."""
+    g = _bfs_graph()
+    pg = partition_2d(g, PartitionConfig(p=2, l=2, lane=4))
+    prob = bfs_multi(ROOTS)
+    res = run(prob, g, pg, EngineOptions(backend="pallas"))
+    dist = res.labels["dist"]
+    assert dist.shape == (g.num_vertices, len(ROOTS))
+    for j, r in enumerate(ROOTS):
+        single = run(bfs(r), g, pg, EngineOptions(backend="pallas"))
+        np.testing.assert_array_equal(dist[:, j], single.labels["label"])
+    for opts in (
+        EngineOptions(backend="xla"),
+        EngineOptions(backend="pallas", immediate_updates=False),
+        EngineOptions(backend="pallas", dynamic_tile_skip=False),
+    ):
+        other = run(prob, g, pg, opts)
+        np.testing.assert_array_equal(dist, other.labels["dist"])
+        assert other.iterations == res.iterations
+
+
+def test_bfs_multi_partial_word_lanes():
+    """K=40 spans a full word + a partial second word: every lane (both
+    words, including the dead tail bits) recovers the reference distances."""
+    g = G.symmetrize(G.rmat(7, 4, seed=3))
+    pg = partition_2d(g, PartitionConfig(p=2, l=2, lane=4))
+    rng = np.random.default_rng(0)
+    roots = rng.integers(0, g.num_vertices, size=40).tolist()
+    res = run(bfs_multi(roots), g, pg, EngineOptions(backend="pallas"))
+    for j, r in enumerate(roots):
+        np.testing.assert_array_equal(res.labels["dist"][:, j],
+                                      bfs_reference(g, r))
+
+
+def test_multi_query_hub_split_graph():
+    """Lane batching composes with hub-row splitting (two-level reduce): the
+    split layout must stay bit-identical per lane on a star graph whose hub
+    row actually splits — for both the packed-OR and the vector-min path."""
+    g = skewed_graph(n=256, kind="star", hub_in_degree=700, avg_degree=2,
+                     seed=7)
+    pg = partition_2d(
+        g, PartitionConfig(p=2, l=2, lane=8, tile_vb=32, tile_eb=32)
+    )
+    assert pg.split_row_fraction > 0.0, "graph must trigger splitting"
+    opts = EngineOptions(backend="pallas")
+    roots = [0, 5, 17, 0]
+    res_b = run(bfs_multi(roots), g, pg, opts)
+    res_s = run(sssp_multi(roots), g, pg, opts)
+    for j, r in enumerate(roots):
+        np.testing.assert_array_equal(res_b.labels["dist"][:, j],
+                                      run(bfs(r), g, pg, opts).labels["label"])
+        np.testing.assert_array_equal(res_s.labels["label"][:, j],
+                                      run(sssp(r), g, pg, opts).labels["label"])
+
+
+# ---------------------------------------------------------------------------
+# vector lanes: sssp_multi / ppr_multi
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("immediate", [True, False])
+def test_sssp_multi_lanes_match_single_runs(immediate):
+    g = _sssp_graph()
+    pg = partition_2d(g, PartitionConfig(p=2, l=2, lane=4))
+    roots = [1, 50, 200]
+    opts = EngineOptions(backend="pallas", immediate_updates=immediate)
+    res = run(sssp_multi(roots), g, pg, opts)
+    for j, r in enumerate(roots):
+        np.testing.assert_array_equal(res.labels["label"][:, j],
+                                      run(sssp(r), g, pg, opts).labels["label"])
+    res_x = run(sssp_multi(roots), g, pg,
+                EngineOptions(backend="xla", immediate_updates=immediate))
+    np.testing.assert_array_equal(res.labels["label"], res_x.labels["label"])
+
+
+def test_ppr_multi_fixed_iters_bit_identical():
+    """At a FIXED iteration count every rank column is bit-identical to its
+    K=1 run: the (vb, Eb) x (Eb, K) dot keeps each lane's summation in its
+    own output column, so widening K cannot reassociate a lane's sum."""
+    g = G.rmat(8, 6, seed=12)
+    pg = partition_2d(g, PartitionConfig(p=2, l=2, lane=4))
+    seeds = [2, 9, 77]
+    opts = EngineOptions(backend="pallas", max_iters=12)
+    res = run(ppr_multi(seeds, tol=0.0), g, pg, opts)
+    assert res.iterations == 12
+    for j, s in enumerate(seeds):
+        single = run(ppr_multi([s], tol=0.0), g, pg, opts)
+        np.testing.assert_array_equal(res.labels["label"][:, j],
+                                      single.labels["label"][:, 0])
+
+
+# ---------------------------------------------------------------------------
+# per-lane convergence
+# ---------------------------------------------------------------------------
+
+
+def _two_chains():
+    """Disconnected graph: a 4-vertex chain (lane 0 converges fast) and a
+    47-vertex chain (lane 1 keeps the batch running)."""
+    short = np.arange(3, dtype=np.uint32)
+    long = np.arange(4, 50, dtype=np.uint32)
+    src = np.concatenate([short, long])
+    dst = np.concatenate([short + 1, long + 1])
+    return G.symmetrize(G.COOGraph(src=src, dst=dst, num_vertices=51))
+
+
+def test_per_lane_convergence_frozen_lane():
+    """A converged lane's dist column freezes while the other lane advances,
+    and not_converged_lanes reports exactly which lanes are live."""
+    g = _two_chains()
+    pg = partition_2d(g, PartitionConfig(p=2, l=2, lane=4))
+    prob = bfs_multi([0, 4])
+    labels = prepare_labels(prob, g, pg)
+    iteration = _make_iteration(prob, pg, EngineOptions(backend="xla"))
+    masks, dists = [], []
+    for _ in range(50):
+        new = iteration(labels)
+        masks.append(np.asarray(prob.not_converged_lanes(labels, new)))
+        dists.append(np.asarray(new["dist"]))
+        if not np.asarray(prob.not_converged(labels, new)):
+            break
+        labels = new
+    masks = np.stack(masks)
+    # lane 0 (3-hop chain) finishes long before lane 1 (46-hop chain): the
+    # mask must pass through [False, True] — converged lane, live batch
+    assert masks[-1].tolist() == [False, False]
+    lane0_live = int(np.max(np.nonzero(masks[:, 0])[0]))
+    lane1_live = int(np.max(np.nonzero(masks[:, 1])[0]))
+    assert lane0_live < lane1_live
+    assert masks[lane0_live + 1].tolist() == [False, True]
+    # frozen: lane 0's column never changes again after its last live step
+    for d in dists[lane0_live + 1:]:
+        np.testing.assert_array_equal(d[..., 0], dists[lane0_live][..., 0])
+    # and the final distances are the per-component references
+    final = run(prob, g, pg, EngineOptions(backend="pallas")).labels["dist"]
+    np.testing.assert_array_equal(final[:, 0], bfs_reference(g, 0))
+    np.testing.assert_array_equal(final[:, 1], bfs_reference(g, 4))
+
+
+def test_engine_options_lanes_admission_check():
+    g = _bfs_graph()
+    pg = partition_2d(g, PartitionConfig(p=2, l=2, lane=4))
+    prob = bfs_multi([1, 2, 3])
+    run(prob, g, pg, EngineOptions(backend="pallas", lanes=3))  # matches: ok
+    with pytest.raises(ValueError, match="lanes"):
+        run(prob, g, pg, EngineOptions(backend="pallas", lanes=8))
+    with pytest.raises(ValueError, match="lanes"):
+        run(bfs(1), g, pg, EngineOptions(backend="pallas", lanes=3))
+
+
+# ---------------------------------------------------------------------------
+# structural: the stream carries no lane dimension
+# ---------------------------------------------------------------------------
+
+
+def _iteration_avals(problem, pg, g):
+    labels = prepare_labels(problem, g, pg)
+    iteration = _make_iteration(problem, pg, EngineOptions(backend="pallas"))
+    jaxpr = jax.make_jaxpr(iteration)(labels)
+    avals = []
+
+    def walk(jp):
+        for eqn in jp.eqns:
+            for v in eqn.outvars:
+                if hasattr(v, "aval") and hasattr(v.aval, "shape"):
+                    avals.append(
+                        (tuple(v.aval.shape), str(getattr(v.aval, "dtype", "")))
+                    )
+            for sub in jax.core.jaxprs_in_params(eqn.params):
+                walk(sub.jaxpr if hasattr(sub, "jaxpr") else sub)
+
+    walk(jaxpr.jaxpr)
+    return avals
+
+
+def test_edge_stream_fetched_once_regardless_of_k():
+    """The bandwidth point of lane batching, checked structurally: a K=64
+    iteration's jaxpr slices exactly ONE full-size (p, R, T, Eb) int32
+    intermediate — the packed word stream, same count as K=1 — and no
+    intermediate widens the stream by a lane axis."""
+    g = _bfs_graph()
+    pg = partition_2d(g, PartitionConfig(p=2, l=2, lane=4))
+    tile_shape = (pg.p,) + pg.tile_word.shape[2:]
+    rng = np.random.default_rng(1)
+    for k in (1, 64):
+        roots = rng.integers(0, g.num_vertices, size=k).tolist()
+        avals = _iteration_avals(bfs_multi(roots), pg, g)
+        int32_tiles = [d for s, d in avals if s == tile_shape and d == "int32"]
+        assert len(int32_tiles) == 1, (k, int32_tiles)
+        laned_tiles = [s for s, _ in avals
+                       if len(s) == len(tile_shape) + 1
+                       and s[: len(tile_shape)] == tile_shape]
+        assert not laned_tiles, (k, laned_tiles)
+
+
+# ---------------------------------------------------------------------------
+# distributed: lane batching over the shard_map crossbar
+# ---------------------------------------------------------------------------
+
+
+def test_distributed_multi_query_matches_single_process():
+    run_sub(
+        PRELUDE
+        + """
+from repro.core import graph as G
+from repro.core.partition import PartitionConfig, partition_2d
+from repro.core.problems import bfs_multi, sssp_multi
+from repro.core.engine import EngineOptions, run
+from repro.core.distributed import run_distributed
+from repro.core.frontier import run_distributed_frontier
+
+g = G.symmetrize(G.rmat(8, 8, seed=3))
+pg = partition_2d(g, PartitionConfig(p=4, l=2, lane=4, stride=100))
+prob = bfs_multi([3, 7, 0, 100, 3])
+res = run_distributed(prob, g, pg, mesh4)
+single = run(prob, g, pg, EngineOptions(backend="pallas"))
+assert np.array_equal(res.labels["dist"], single.labels["dist"])
+assert res.iterations == single.iterations
+
+rng = np.random.default_rng(5)
+w = (rng.random(g.num_edges) + 0.1).astype(np.float32)
+gw = G.COOGraph(src=g.src, dst=g.dst, num_vertices=g.num_vertices, weights=w)
+pgw = partition_2d(gw, PartitionConfig(p=4, l=2, lane=4, stride=100))
+sprob = sssp_multi([1, 50, 200])
+res_s = run_distributed(sprob, gw, pgw, mesh4)
+single_s = run(sprob, gw, pgw, EngineOptions(backend="pallas"))
+assert np.array_equal(res_s.labels["label"], single_s.labels["label"])
+assert res_s.iterations == single_s.iterations
+
+# frontier-compressed exchange ships (index, K-row) pairs: same labels
+res_f, stats = run_distributed_frontier(sssp_multi([1, 50, 200]), gw, pgw,
+                                        mesh4, budget=64)
+assert np.array_equal(res_f.labels["label"], single_s.labels["label"])
+assert stats["sparse_phases"] + stats["full_phases"] > 0
+print("OK")
+"""
+    )
