@@ -16,7 +16,8 @@ test:
 check-dist:
 	XLA_FLAGS="--xla_force_host_platform_device_count=8" $(PYTHON) -m pytest -x -q \
 		tests/test_distributed.py tests/test_distributed_equiv.py \
-		tests/test_elastic.py tests/test_fault_tolerance.py
+		tests/test_elastic.py tests/test_fault_tolerance.py \
+		tests/test_direction_switch.py
 
 # tiny-graph engine-path sanity: metric keys + Pallas/XLA agreement (CI)
 bench-smoke:

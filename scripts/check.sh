@@ -15,15 +15,19 @@ fi
 
 python -m pytest -x -q
 
-# tiny-graph perf-path smoke: metric keys + Pallas/XLA agreement asserted
-# (no timing thresholds), one high-diameter dynamic-skip point (mean dynamic
-# skipped-tile fraction must beat the static padding skip), and one
-# multi-channel distributed point; full timings are `make bench-engine`.
+# tiny-graph perf-path smoke: metric keys + Pallas/XLA agreement asserted,
+# one high-diameter dynamic-skip point (mean dynamic skipped-tile fraction
+# must beat the static padding skip), one multi-channel distributed point,
+# and the full-size shuffled path-512 direction point — the only wall-clock
+# threshold smoke carries (push/pull auto >= 1.3x over the PR 6 pull-only
+# schedule); full timings are `make bench-engine`.
 python -m benchmarks.bench_engine --smoke
 
 # sharded job (make check-dist): distributed engine + repro.dist suites under
 # 8 simulated memory channels — the un-skipped test_distributed /
-# test_elastic / test_fault_tolerance files plus the equivalence suite.
+# test_elastic / test_fault_tolerance files plus the equivalence suite and
+# the direction-switch suite (its sharded jaxpr proof needs the devices).
 XLA_FLAGS="--xla_force_host_platform_device_count=8" python -m pytest -x -q \
     tests/test_distributed.py tests/test_distributed_equiv.py \
-    tests/test_elastic.py tests/test_fault_tolerance.py
+    tests/test_elastic.py tests/test_fault_tolerance.py \
+    tests/test_direction_switch.py

@@ -55,10 +55,12 @@ from repro.core.engine import (  # noqa: E402
     EngineOptions,
     EngineResult,
     channel_phase_reduce_pallas,
+    channel_phase_scatter_pallas,
     dynamic_skip_enabled,
     make_iteration,
     phase_consts_at,
     prepare_labels,
+    push_enabled,
     unpad_labels,
 )
 from repro.core.partition import PartitionedGraph  # noqa: E402
@@ -73,8 +75,14 @@ __all__ = [
 ]
 
 # fixed flattening order for the packed per-channel constants (shard_map takes
-# positional args; None entries are elided per problem/partition)
-_CONST_KEYS = ("word", "word_hi", "counts", "w", "row_pos", "split_map", "coverage")
+# positional args; None entries are elided per problem/partition). The push_*
+# entries are the source-binned scatter stream for direction-optimizing
+# traversal (docs/tile_layout.md §9) — dropped by channel_arrays for sum
+# problems, exactly like coverage.
+_CONST_KEYS = (
+    "word", "word_hi", "counts", "w", "row_pos", "split_map", "coverage",
+    "push_word", "push_word_hi", "push_counts", "push_w", "push_coverage",
+)
 
 
 def crossbar_exchange(sub_payload: jnp.ndarray, axis: str) -> jnp.ndarray:
@@ -151,6 +159,15 @@ def build_distributed_run(
         cm_all.update({k: None for k in _CONST_KEYS if k not in const_keys})
         # coverage feeds the active-tile schedule below, not the phase reduce
         coverage = cm_all.pop("coverage")
+        # the push stream never enters the pull phase reduce: pop it and
+        # re-key to the canonical stream names for the scatter primitive.
+        push_cm = {
+            "word": cm_all.pop("push_word"),
+            "word_hi": cm_all.pop("push_word_hi"),
+            "counts": cm_all.pop("push_counts"),
+            "w": cm_all.pop("push_w"),
+        }
+        push_coverage = cm_all.pop("push_coverage")
 
         def reduce_at_phase(m, labels_local, active=None):
             payload = problem.src_transform(labels_local)  # (Vl,) elementwise
@@ -190,11 +207,81 @@ def build_distributed_run(
                 # dense/dynamic arms must line up across devices).
                 return jax.lax.psum(fwords.frontier_popcount(fw), axis)
 
+        push_on = push_enabled(problem, pg, opts)
+        push_reduce_at_phase = push_phase_active = None
+        if push_on:
+
+            def push_reduce_at_phase(m, labels_local, active):
+                payload = problem.src_transform(labels_local)
+                sub = jax.lax.dynamic_slice_in_dim(
+                    payload, m * sub_size, sub_size, axis=0
+                )
+                gathered = crossbar_exchange(sub, axis)
+                reduced = channel_phase_scatter_pallas(
+                    problem, pg, gathered, phase_consts_at(push_cm, m), opts,
+                    active,
+                )  # (1, Vl)
+                return reduced[0]
+
+            def push_phase_active(m, live_fw):
+                cov_m = jax.lax.dynamic_index_in_dim(
+                    push_coverage, m, axis=1, keepdims=False
+                )  # (1, B, Tp, Wc)
+                cnt_m = jax.lax.dynamic_index_in_dim(
+                    push_cm["counts"], m, axis=1, keepdims=False
+                )  # (1, B)
+                local = jax.lax.dynamic_index_in_dim(
+                    live_fw, m, axis=-2, keepdims=False
+                )  # (Ws,)
+                gfw = crossbar_exchange(local, axis)  # (p * Ws,)
+                return fwords.frontier_active_tiles(cov_m, gfw, cnt_m, None)
+
+            def push_phase_live(m, live_fw):
+                # phase-level skip, collective edition: the GLOBAL any() via
+                # psum so every channel takes the same lax.cond branch (the
+                # skipped arm elides the crossbar all-gathers, which must
+                # line up across devices).
+                local = jnp.any(
+                    jax.lax.dynamic_index_in_dim(
+                        live_fw, m, axis=-2, keepdims=False
+                    )
+                    != 0
+                )
+                return jax.lax.psum(local.astype(jnp.int32), axis) > 0
+
         iteration = make_iteration(
-            problem, pg, opts, reduce_at_phase, phase_active, density_fn
+            problem, pg, opts, reduce_at_phase, phase_active, density_fn,
+            push_reduce_at_phase=push_reduce_at_phase,
+            push_phase_active=push_phase_active,
+            push_phase_live=push_phase_live if push_on else None,
         )
 
-        if dyn:
+        if dyn and push_on:
+            # direction-carried loop: the switch reads the PSUM'd popcount
+            # (density_fn), so every channel chooses the same direction and
+            # the crossbar collectives inside each arm line up.
+
+            def cond(carry):
+                _, _, it, changed, _ = carry
+                return jnp.logical_and(changed, it < opts.max_iters)
+
+            def step(carry):
+                labels, fw, it, _, dirp = carry
+                new, nf, dirn = iteration(labels, fw, dirp)
+                changed = (
+                    jax.lax.psum(
+                        jnp.any(nf != jnp.uint32(0)).astype(jnp.int32), axis
+                    )
+                    > 0
+                )
+                return new, nf, it + 1, changed, dirn
+
+            fw0 = fwords.full_frontier_words(pg.l, sub_size)  # (l, Ws) local
+            labels, _, iters, changed, _ = jax.lax.while_loop(
+                cond, step,
+                (labels, fw0, jnp.int32(0), jnp.bool_(True), jnp.bool_(False)),
+            )
+        elif dyn:
 
             def cond(carry):
                 _, _, it, changed = carry

@@ -99,7 +99,9 @@ __all__ = [
     "unpad_labels",
     "make_iteration",
     "dynamic_skip_enabled",
+    "push_enabled",
     "channel_phase_reduce_pallas",
+    "channel_phase_scatter_pallas",
     "channel_phase_reduce_xla",
 ]
 
@@ -131,12 +133,30 @@ class EngineOptions:
     # a mismatched problem raises, which is the serving loop's admission check
     # that a batch was assembled to the width the jit cache is warm for.
     lanes: int | None = None
+    # direction-optimizing traversal (Beamer push/pull, docs/tile_layout.md
+    # §9). 'auto' switches per iteration on the union-frontier popcount:
+    # enter push below alpha * total source bits, stay push below beta
+    # (hysteresis; both scaled by 1/K for a K-lane batch, since a push pass
+    # scatters each vertex's whole lane row). 'push'/'pull' force one
+    # direction — 'push' raises unless the problem/partition admit it.
+    direction: str = "auto"
+    direction_alpha: float = 0.02
+    direction_beta: float = 0.1
 
     def __post_init__(self):
         if self.backend not in _BACKENDS:
             raise ValueError(f"backend must be one of {_BACKENDS}, got {self.backend!r}")
         if self.lanes is not None and self.lanes < 0:
             raise ValueError(f"lanes must be None or >= 0, got {self.lanes}")
+        if self.direction not in ("auto", "push", "pull"):
+            raise ValueError(
+                f"direction must be 'auto', 'push' or 'pull', got {self.direction!r}"
+            )
+        if not 0.0 <= self.direction_alpha <= self.direction_beta:
+            raise ValueError(
+                "need 0 <= direction_alpha <= direction_beta, got "
+                f"{self.direction_alpha} / {self.direction_beta}"
+            )
 
 
 def dynamic_skip_enabled(problem, pg, opts: EngineOptions) -> bool:
@@ -151,6 +171,20 @@ def dynamic_skip_enabled(problem, pg, opts: EngineOptions) -> bool:
         and opts.backend == "pallas"
         and problem.reduce_kind in ("min", "or")
         and getattr(pg, "tile_coverage", None) is not None
+    )
+
+
+def push_enabled(problem, pg, opts: EngineOptions) -> bool:
+    """Push (scatter) direction is admissible: an idempotent monotone reduce
+    (min/or — a skipped source block's contributions are already merged, and
+    scatter order across blocks is arbitrary; sum stays pull-only), the
+    Pallas backend, a partition-time push stream, and dynamic scheduling (the
+    frontier carry is what both the switch and the push active map read).
+    ``direction='pull'`` opts out entirely."""
+    return bool(
+        opts.direction != "pull"
+        and getattr(pg, "push_word", None) is not None
+        and dynamic_skip_enabled(problem, pg, opts)
     )
 
 
@@ -326,6 +360,35 @@ def channel_phase_reduce_pallas(problem, pg, gathered, cm, opts, active=None):
     return reduced
 
 
+def channel_phase_scatter_pallas(problem, pg, gathered, cm, opts, active=None):
+    """Push-mode counterpart of ``channel_phase_reduce_pallas``: ONE
+    ``pallas_call`` over grid (n, B, Tp) scatters the SOURCE-binned push
+    stream of phase m into the whole per-core label row. ``cm`` is a phase
+    slice of the push constants keyed like the pull ones (``word``/
+    ``word_hi``/``counts``/``w``). ``active`` is the frontier-ANDed (n, B,
+    Tp) mask over the push stream's own coverage words — on a narrow
+    frontier only the blocks containing frontier sources stream, which is
+    the whole point of the direction switch. Output rows are natural rows by
+    construction (no row packing or hub splitting on the push side), so
+    there is no level-2 fold. Returns (n, Vl[, L])."""
+    from repro.kernels.csr_gather_reduce.kernel import scatter_reduce_cores_pallas
+
+    return scatter_reduce_cores_pallas(
+        gathered,
+        cm["word"],
+        cm["counts"],
+        cm["word_hi"],
+        cm["w"],
+        fwords.active_fetch_map(active) if active is not None else None,
+        num_rows=pg.vertices_per_core,
+        src_bits=pg.push_src_bits,
+        kind=problem.reduce_kind,
+        edge_op=problem.edge_op,
+        identity=problem.identity,
+        interpret=opts.kernel_interpret,
+    )
+
+
 def channel_phase_reduce_xla(problem, pg, gathered, cm, opts):
     """Oracle form of the channel-local phase reduce: materialize (n, E_pad)
     contributions via take/where, then segment-reduce. ``cm`` holds the flat
@@ -368,6 +431,11 @@ def _phase_reduce_xla(problem, pg, consts, labels, m, opts, active=None):
     )
 
 
+_PUSH_KEYS = (
+    "push_word", "push_word_hi", "push_counts", "push_w", "push_coverage"
+)
+
+
 def make_iteration(
     problem: Problem,
     pg: PartitionedGraph,
@@ -376,6 +444,9 @@ def make_iteration(
     phase_active=None,
     density_fn=None,
     with_stats: bool = False,
+    push_reduce_at_phase=None,
+    push_phase_active=None,
+    push_phase_live=None,
 ):
     """Build one engine iteration (the l-phase loop + apply semantics).
 
@@ -405,7 +476,28 @@ def make_iteration(
     -> (n, R, T) bool`` builds phase m's active-tile mask from the live
     frontier words; ``density_fn(frontier) -> int32`` is the global frontier
     popcount for the density switch (distributed: psum over channels, so
-    every device takes the same ``lax.cond`` branch)."""
+    every device takes the same ``lax.cond`` branch).
+
+    Direction-optimizing traversal (``push_enabled``, docs/tile_layout.md
+    §9): a third calling mode ``iteration(labels, frontier, prev_push)``
+    adds the Beamer push/pull switch on top of dynamic scheduling.
+    ``prev_push`` is last iteration's direction (bool; False on iteration
+    0) and the return gains a trailing ``used_push`` bool BEFORE the stats
+    element: ``(new_labels, new_frontier, used_push[, stats])``. The switch
+    is taken once per iteration on the same union-frontier popcount the
+    density switch reads — enter push below ``direction_alpha`` * total
+    source bits, stay while below ``direction_beta`` (both scaled by 1/K
+    for a K-lane batch) — and a ``lax.cond`` picks the pull phase loop or
+    the push phase loop (same carry, bit-identical labels either way).
+    Calls WITHOUT ``prev_push`` keep the exact legacy pull-only behavior
+    and arity — the push machinery engages only when the caller threads
+    the direction carry — EXCEPT under a forced ``direction='push'``,
+    where every dynamic call runs the push loop directly (no cond, no
+    pull-side stream in the jaxpr; legacy arity when ``prev_push`` is
+    omitted). ``push_reduce_at_phase(m, labels, active)`` /
+    ``push_phase_active(m, live_frontier)`` are the distributed overrides,
+    mirroring the pull hooks (the push active map has no dense fallback:
+    a wide frontier is what the switch itself avoids)."""
     if opts.lanes is not None and opts.lanes != problem.lanes:
         raise ValueError(
             f"EngineOptions.lanes={opts.lanes} but problem "
@@ -417,12 +509,23 @@ def make_iteration(
     # immediate_updates settings therefore produce identical results.
     is_min = problem.reduce_kind == "min"
     dyn = dynamic_skip_enabled(problem, pg, opts)
+    push_on = push_enabled(problem, pg, opts)
+    forced_push = opts.direction == "push"
+    if forced_push and not push_on:
+        raise ValueError(
+            "direction='push' requires an admissible push path: a min/or "
+            "problem, the pallas backend, a partition built with "
+            "build_push=True, and dynamic scheduling (dynamic_skip_enabled)"
+        )
     if reduce_at_phase is None:
         consts = _edge_constants(problem, pg, opts)
         # coverage feeds phase_active below, never the phase reduce itself —
         # keep it out of the sliced consts so the static path's jaxpr is
         # untouched and the dynamic path slices it exactly once per phase.
         coverage = consts.pop("coverage", None)
+        # the push stream likewise never enters the pull phase reduce; pop it
+        # unconditionally so phase_consts_at never slices it on the pull path.
+        push_raw = {k: consts.pop(k, None) for k in _PUSH_KEYS}
         reduce_fn = (
             _phase_reduce_pallas if opts.backend == "pallas" else _phase_reduce_xla
         )
@@ -447,6 +550,63 @@ def make_iteration(
                 ).reshape(-1)
                 return fwords.frontier_active_tiles(cov_m, gfw, cnt_m, use_dense)
 
+        if push_on and push_phase_active is None:
+            # push constants re-keyed to the canonical stream names so
+            # phase_consts_at and the scatter primitive read one layout.
+            push_cm_all = {
+                "word": push_raw["push_word"],
+                "word_hi": push_raw["push_word_hi"],
+                "counts": push_raw["push_counts"],
+                "w": push_raw["push_w"],
+            }
+            push_cov = push_raw["push_coverage"]
+            push_counts = push_raw["push_counts"]
+
+            def push_reduce_at_phase(m, labels, active):
+                gathered = _gather_local(problem, pg, labels, m)
+                return channel_phase_scatter_pallas(
+                    problem, pg, gathered,
+                    phase_consts_at(push_cm_all, m), opts, active,
+                )
+
+            def push_phase_active(m, live_fw):
+                cov_m = jax.lax.dynamic_index_in_dim(
+                    push_cov, m, axis=1, keepdims=False
+                )  # (p, B, Tp, Wc)
+                cnt_m = jax.lax.dynamic_index_in_dim(
+                    push_counts, m, axis=1, keepdims=False
+                )  # (p, B)
+                gfw = jax.lax.dynamic_index_in_dim(
+                    live_fw, m, axis=-2, keepdims=False
+                ).reshape(-1)
+                # no dense fallback: a wide frontier takes the pull branch
+                # upstream, so the push map is always frontier-ANDed.
+                return fwords.frontier_active_tiles(cov_m, gfw, cnt_m, None)
+
+            def push_phase_live(m, live_fw):
+                # phase-level skip: a phase none of whose sources are in the
+                # live frontier scatters nothing (its reduce is the identity
+                # for min/or), so the push arm drops the whole phase —
+                # active map, kernel launch and merge included. This is the
+                # coarsest grain of "stream only the frontier's out-tiles".
+                return jnp.any(
+                    jax.lax.dynamic_index_in_dim(
+                        live_fw, m, axis=-2, keepdims=False
+                    )
+                    != 0
+                )
+
+    if push_on and push_phase_active is None:
+        # a caller supplying its own reduce hooks (the distributed engine)
+        # must supply the push hooks too to opt in; without them the
+        # iteration stays pull-only.
+        if forced_push:
+            raise ValueError(
+                "direction='push' with caller-supplied reduce hooks needs "
+                "push_reduce_at_phase/push_phase_active"
+            )
+        push_on = False
+
     if dyn:
         # dense-fallback threshold over GLOBAL real source bits (the frontier
         # tail bits are never set, so popcount is over real sources only)
@@ -455,6 +615,16 @@ def make_iteration(
         )
         if density_fn is None:
             density_fn = fwords.frontier_popcount
+    if push_on:
+        # Beamer alpha/beta hysteresis over the SAME popcount, scaled by 1/K
+        # for a K-lane batch: a push pass scatters each changed vertex's
+        # whole lane row, so the per-frontier-bit push cost grows ~K-fold
+        # and the crossover shifts down accordingly (switch per batch on the
+        # union popcount, never per lane).
+        lane_k = max(problem.lanes, 1)
+        total_bits = pg.p * pg.l * pg.sub_size
+        alpha_thr = jnp.int32(int(total_bits * opts.direction_alpha / lane_k))
+        beta_thr = jnp.int32(int(total_bits * opts.direction_beta / lane_k))
 
     def _words_of(old, new):
         # lane-batched labels carry a trailing lane axis: the frontier is the
@@ -463,11 +633,24 @@ def make_iteration(
             old, new, pg.l, pg.sub_size, lanes=problem.lanes > 0
         )
 
-    def _stats(active_tiles, use_dense):
-        return {
+    def _stats(active_tiles, use_dense, use_push=None, pop=None):
+        out = {
             "active_tiles": active_tiles,
             "use_dense": use_dense.astype(jnp.int32),
         }
+        if use_push is not None:  # push-aware calls only (legacy keys stable)
+            out["direction"] = use_push.astype(jnp.int32)  # 1 = push
+            out["popcount"] = pop
+        return out
+
+    def _choose_push(pop, prev_push):
+        """The per-iteration direction decision (one bool for the whole
+        batch). Forced 'push' is handled by the callers — they run the push
+        loop directly so no pull-side stream enters the jaxpr."""
+        use_push = pop < alpha_thr
+        if prev_push is not None:  # hysteresis: stay push while below beta
+            use_push = use_push | (prev_push & (pop < beta_thr))
+        return use_push
 
     if is_min and opts.immediate_updates:
 
@@ -484,88 +667,199 @@ def make_iteration(
 
             return jax.lax.fori_loop(0, pg.l, phase, labels)
 
-        def _dynamic(labels, fw_in):
-            use_dense = density_fn(fw_in) >= dense_thr
+        def _phase_loop(labels, fw_in, reduce_fn_m, active_fn_m,
+                        phase_live_fn=None):
+            """The async phase sweep, parameterized over direction: the pull
+            and push arms differ ONLY in which stream reduces a phase and
+            which coverage builds its active map — merge semantics, frontier
+            augmentation, and the carry are shared, which is what makes the
+            lax.cond arms line up. ``phase_live_fn`` (push arm only) skips a
+            whole phase when none of its sources are live: the reduce would
+            return the identity, so labels, frontier words and the active
+            count are all unchanged — bit-identical, minus the phase's
+            fixed cost."""
 
-            def phase(m, carry):
+            def body(m, carry):
                 labels, nf, n_act = carry
-                # live frontier = last iteration's changes OR this
-                # iteration's so-far — async phases see fresh labels, so the
-                # schedule must track them to stay identical to dense async.
-                active = phase_active(m, fw_in | nf, use_dense)
-                new, lab, merged = _merge(labels, reduce_at_phase(m, labels, active))
+                active = active_fn_m(m, fw_in | nf)
+                new, lab, merged = _merge(labels, reduce_fn_m(m, labels, active))
                 nf = nf | _words_of(lab, merged)
                 n_act = n_act + jnp.sum(active, dtype=jnp.int32)
                 return new, nf, n_act
 
-            labels, nf, n_act = jax.lax.fori_loop(
+            def phase(m, carry):
+                # live frontier = last iteration's changes OR this
+                # iteration's so-far — async phases see fresh labels, so the
+                # schedule must track them to stay identical to dense async.
+                if phase_live_fn is None:
+                    return body(m, carry)
+                return jax.lax.cond(
+                    phase_live_fn(m, fw_in | carry[1]),
+                    lambda c: body(m, c),
+                    lambda c: c,
+                    carry,
+                )
+
+            return jax.lax.fori_loop(
                 0, pg.l, phase, (labels, jnp.zeros_like(fw_in), jnp.int32(0))
             )
+
+        def _dynamic(labels, fw_in, prev_push=None):
+            pop = density_fn(fw_in)
+            use_dense = pop >= dense_thr
+
+            def _pull(labels):
+                return _phase_loop(
+                    labels, fw_in, reduce_at_phase,
+                    lambda m, live: phase_active(m, live, use_dense),
+                )
+
+            if not push_on or (prev_push is None and not forced_push):
+                # legacy pull-only dynamic call — byte-for-byte the PR 6 path
+                labels, nf, n_act = _pull(labels)
+                if with_stats:
+                    return labels, nf, _stats(n_act, use_dense)
+                return labels, nf
+
+            def _push(labels):
+                return _phase_loop(
+                    labels, fw_in, push_reduce_at_phase,
+                    lambda m, live: push_phase_active(m, live),
+                    phase_live_fn=push_phase_live,
+                )
+
+            if forced_push:
+                use_push = jnp.bool_(True)
+                labels, nf, n_act = _push(labels)
+            else:
+                use_push = _choose_push(pop, prev_push)
+                labels, nf, n_act = jax.lax.cond(use_push, _push, _pull, labels)
             # monotone min: the union of per-phase change words == the words
             # of (labels in vs labels out) — nf IS the next frontier.
+            if prev_push is None:  # forced push, legacy arity
+                if with_stats:
+                    return labels, nf, _stats(n_act, use_dense, use_push, pop)
+                return labels, nf
             if with_stats:
-                return labels, nf, _stats(n_act, use_dense)
-            return labels, nf
+                return labels, nf, use_push, _stats(n_act, use_dense, use_push, pop)
+            return labels, nf, use_push
 
-        def iteration(labels, frontier=None):
+        def iteration(labels, frontier=None, prev_push=None):
             if frontier is None:
+                if prev_push is not None:
+                    raise ValueError("prev_push requires a frontier")
                 return _static(labels)
             if not dyn:
                 raise ValueError(
                     "iteration got a frontier but dynamic skipping is "
                     "disabled (see dynamic_skip_enabled)"
                 )
-            return _dynamic(labels, frontier)
+            if prev_push is not None and not push_on:
+                raise ValueError(
+                    "iteration got prev_push but the push direction is not "
+                    "admissible (see push_enabled)"
+                )
+            return _dynamic(labels, frontier, prev_push)
 
         return iteration
 
     # synchronous path: accumulate contributions, apply at iteration end
-    def iteration(labels, frontier=None):
+    def iteration(labels, frontier=None, prev_push=None):
+        if frontier is None and prev_push is not None:
+            raise ValueError("prev_push requires a frontier")
         if frontier is not None and not dyn:
             raise ValueError(
                 "iteration got a frontier but dynamic skipping is disabled "
                 "(see dynamic_skip_enabled)"
             )
+        if prev_push is not None and not push_on:
+            raise ValueError(
+                "iteration got prev_push but the push direction is not "
+                "admissible (see push_enabled)"
+            )
         lab = labels[problem.merge_field]
         acc_dtype = jnp.float32 if problem.reduce_kind == "sum" else lab.dtype
         acc0 = jnp.full(lab.shape, problem.identity, dtype=acc_dtype)
         dynamic = frontier is not None
-        use_dense = density_fn(frontier) >= dense_thr if dynamic else None
+        pop = density_fn(frontier) if dynamic else None
+        use_dense = pop >= dense_thr if dynamic else None
         n_act0 = jnp.int32(0)
+        push_aware = dynamic and push_on and (prev_push is not None or forced_push)
 
-        def phase(m, carry):
-            acc, n_act = carry
-            if dynamic:
-                # synchronous phases only see LAST iteration's labels, so
-                # the input frontier alone is the live frontier.
-                active = phase_active(m, frontier, use_dense)
-                n_act = n_act + jnp.sum(active, dtype=jnp.int32)
-                reduced = reduce_at_phase(m, labels, active)
+        def acc_loop(reduce_fn_m, active_fn_m, phase_live_fn=None):
+            def body(m, carry):
+                acc, n_act = carry
+                if dynamic:
+                    # synchronous phases only see LAST iteration's labels, so
+                    # the input frontier alone is the live frontier.
+                    active = active_fn_m(m, frontier)
+                    n_act = n_act + jnp.sum(active, dtype=jnp.int32)
+                    reduced = reduce_fn_m(m, labels, active)
+                else:
+                    reduced = reduce_fn_m(m, labels)
+                if problem.reduce_kind == "min":
+                    return jnp.minimum(acc, reduced.astype(acc.dtype)), n_act
+                if problem.reduce_kind == "or":
+                    return acc | reduced.astype(acc.dtype), n_act
+                return acc + reduced.astype(acc.dtype), n_act
+
+            def phase(m, carry):
+                # push arm phase-level skip (see _phase_loop): a phase with
+                # no live sources contributes the reduce identity
+                if phase_live_fn is None:
+                    return body(m, carry)
+                return jax.lax.cond(
+                    phase_live_fn(m, frontier),
+                    lambda c: body(m, c),
+                    lambda c: c,
+                    carry,
+                )
+
+            return jax.lax.fori_loop(0, pg.l, phase, (acc0, n_act0))
+
+        def _pull_loop(_=None):
+            return acc_loop(
+                reduce_at_phase,
+                (lambda m, fw: phase_active(m, fw, use_dense)) if dynamic else None,
+            )
+
+        use_push = None
+        if push_aware:
+
+            def _push_loop(_=None):
+                return acc_loop(
+                    push_reduce_at_phase,
+                    lambda m, fw: push_phase_active(m, fw),
+                    phase_live_fn=push_phase_live,
+                )
+
+            if forced_push:
+                use_push = jnp.bool_(True)
+                acc, n_act = _push_loop()
             else:
-                reduced = reduce_at_phase(m, labels)
-            if problem.reduce_kind == "min":
-                return jnp.minimum(acc, reduced.astype(acc.dtype)), n_act
-            if problem.reduce_kind == "or":
-                return acc | reduced.astype(acc.dtype), n_act
-            return acc + reduced.astype(acc.dtype), n_act
+                use_push = _choose_push(pop, prev_push)
+                acc, n_act = jax.lax.cond(use_push, _push_loop, _pull_loop, None)
+        else:
+            acc, n_act = _pull_loop()
 
-        acc, n_act = jax.lax.fori_loop(0, pg.l, phase, (acc0, n_act0))
+        def _ret(new, nf):
+            extras = ()
+            if prev_push is not None:
+                extras += (use_push,)
+            if with_stats:
+                extras += (_stats(n_act, use_dense, use_push, pop if push_aware else None),)
+            return (new, nf) + extras if extras else (new, nf)
+
         if problem.reduce_kind == "min":
             new = dict(labels)
             merged = jnp.minimum(lab, acc.astype(lab.dtype))
             new[problem.merge_field] = merged
             if dynamic:
-                nf = _words_of(lab, merged)
-                if with_stats:
-                    return new, nf, _stats(n_act, use_dense)
-                return new, nf
+                return _ret(new, _words_of(lab, merged))
             return new
         new = problem.finalize(labels, acc)
         if dynamic:  # 'or' problems: monotone, so frontier scheduling applies
-            nf = _words_of(lab, new[problem.merge_field])
-            if with_stats:
-                return new, nf, _stats(n_act, use_dense)
-            return new, nf
+            return _ret(new, _words_of(lab, new[problem.merge_field]))
         return new
 
     return iteration
@@ -584,6 +878,25 @@ def _run_jit(problem, pg, opts, labels):
         # (empty frontier == no label changed == problem.not_converged False
         # for the monotone min problems dynamic skipping admits).
         fw0 = fwords.full_frontier_words(pg.l, pg.sub_size, lead=(pg.p,))
+        if push_enabled(problem, pg, opts):
+            # direction-optimizing: thread last iteration's direction through
+            # the carry for the alpha/beta hysteresis (False on iteration 0 —
+            # the full frontier always takes the pull branch under 'auto').
+
+            def cond(carry):
+                _, _, it, changed, _ = carry
+                return jnp.logical_and(changed, it < opts.max_iters)
+
+            def body(carry):
+                labels, fw, it, _, dirp = carry
+                new, nf, dirn = iteration(labels, fw, dirp)
+                return new, nf, it + 1, jnp.any(nf != jnp.uint32(0)), dirn
+
+            labels, _, iters, changed, _ = jax.lax.while_loop(
+                cond, body,
+                (labels, fw0, jnp.int32(0), jnp.bool_(True), jnp.bool_(False)),
+            )
+            return labels, iters, changed
 
         def cond(carry):
             _, _, it, changed = carry
@@ -675,9 +988,12 @@ def run_frontier_trace(
     ``iterations`` / ``converged`` plus ``dynamic_skipped_tile_fraction`` — a
     per-iteration list over the SAME denominator as the static
     ``pg.skipped_tile_fraction`` (all (core, phase, row-block) x T_max tile
-    slots), so dynamic >= static always holds and the two are directly
-    comparable in BENCH_engine.json — and ``dense_iterations`` (how often the
-    density switch took the wide-frontier fallback)."""
+    slots; a push iteration's fraction uses the push stream's own (core,
+    phase, src-block) x Tp_max denominator, since that is the stream it
+    scheduled against) — ``dense_iterations`` (how often the density switch
+    took the wide-frontier fallback), ``direction`` (the per-iteration
+    'push'/'pull' choice; all-'pull' when the push path is off), and
+    ``push_iterations``."""
     if not dynamic_skip_enabled(problem, pg, opts):
         raise ValueError(
             "run_frontier_trace needs dynamic skipping: a min problem, the "
@@ -686,11 +1002,24 @@ def run_frontier_trace(
     labels = prepare_labels(problem, g, pg)
     step = jax.jit(make_iteration(problem, pg, opts, with_stats=True))
     fw = fwords.full_frontier_words(pg.l, pg.sub_size, lead=(pg.p,))
+    push_on = push_enabled(problem, pg, opts)
     total_tiles = pg.tile_counts.size * pg.tile_word.shape[3]
-    fractions, dense_iters, it, converged = [], 0, 0, False
+    total_push_tiles = (
+        pg.push_counts.size * pg.push_word.shape[3] if push_on else 0
+    )
+    prev = jnp.bool_(False)
+    fractions, directions = [], []
+    dense_iters, it, converged = 0, 0, False
     while it < opts.max_iters:
-        labels, fw, stats = step(labels, fw)
-        fractions.append(1.0 - int(stats["active_tiles"]) / max(total_tiles, 1))
+        if push_on:
+            labels, fw, prev, stats = step(labels, fw, prev)
+            pushed = bool(stats["direction"])
+        else:
+            labels, fw, stats = step(labels, fw)
+            pushed = False
+        total = total_push_tiles if pushed else total_tiles
+        fractions.append(1.0 - int(stats["active_tiles"]) / max(total, 1))
+        directions.append("push" if pushed else "pull")
         dense_iters += int(stats["use_dense"])
         it += 1
         if not bool(jnp.any(fw != jnp.uint32(0))):  # free convergence check
@@ -705,6 +1034,8 @@ def run_frontier_trace(
             float(np.mean(fractions)) if fractions else 0.0
         ),
         "dense_iterations": dense_iters,
+        "direction": directions,
+        "push_iterations": directions.count("push"),
     }
 
 

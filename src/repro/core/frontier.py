@@ -52,9 +52,11 @@ from repro.core.engine import (  # noqa: E402
     EngineOptions,
     EngineResult,
     channel_phase_reduce_pallas,
+    channel_phase_scatter_pallas,
     dynamic_skip_enabled,
     phase_consts_at,
     prepare_labels,
+    push_enabled,
     unpad_labels,
 )
 from repro.core.partition import PartitionedGraph
@@ -121,11 +123,24 @@ def run_distributed_frontier(
     const_keys = tuple(k for k in _CONST_KEYS if consts[k] is not None)
     const_vals = tuple(consts[k] for k in const_keys)
     dyn = dynamic_skip_enabled(problem, pg, opts)
+    push_on = push_enabled(problem, pg, opts)
+    forced_push = opts.direction == "push"
     ws = fwords.words_per_sub(sub)
     word_pad = ws * fwords.WORD_BITS - sub
     # per-PHASE density threshold: a phase's frontier lives in the p active
     # sub-intervals (p * sub source bits), not the whole vertex set
     dense_thr = jnp.int32(int(pg.p * sub * opts.dynamic_skip_density))
+    # per-phase direction switch over the same per-phase source bits. The
+    # choice is STATELESS here (no cross-iteration hysteresis): each phase's
+    # exchange count is an exact frontier popcount, so alpha alone decides —
+    # forced 'push' only yields to the mandatory-dense iteration 0.
+    lane_k = max(problem.lanes, 1)
+    alpha_thr = jnp.int32(int(pg.p * sub * opts.direction_alpha / lane_k))
+    if forced_push and not push_on:
+        raise ValueError(
+            "direction='push' requires a push stream (PartitionConfig."
+            "build_push), a min/or reduce and dynamic tile scheduling"
+        )
 
     labels0 = prepare_labels(problem, g, pg)
     sharded = {
@@ -141,6 +156,15 @@ def run_distributed_frontier(
         cm_all = dict(zip(const_keys, cvals))
         cm_all.update({k: None for k in _CONST_KEYS if k not in const_keys})
         coverage = cm_all.pop("coverage")
+        # the push stream never enters the pull phase reduce: pop it and
+        # re-key to the canonical stream names for the scatter primitive.
+        push_cm = {
+            "word": cm_all.pop("push_word"),
+            "word_hi": cm_all.pop("push_word_hi"),
+            "counts": cm_all.pop("push_counts"),
+            "w": cm_all.pop("push_w"),
+        }
+        push_coverage = cm_all.pop("push_coverage")
         my_core = jax.lax.axis_index(axis)  # selects this core's cache slice
         payload0 = problem.src_transform(labels)
         # cache rows start from the true initial gathered blocks (one full
@@ -200,9 +224,46 @@ def run_distributed_frontier(
                     active = fwords.frontier_active_tiles(
                         cov_m, gfw, cnt_m, use_dense
                     )
-                reduced = channel_phase_reduce_pallas(
-                    problem, pg, new_row, phase_consts_at(cm_all, m), opts, active
-                )[0]  # (Vl,)
+                if push_on:
+                    # gfw is the exact union frontier for phase m, already on
+                    # every device — the push active map reads it against the
+                    # push stream's own coverage. The pop count is psum'd, so
+                    # all devices take the same lax.cond branch and the
+                    # all-gathers above stay aligned.
+                    use_push = (
+                        (it > 0) if forced_push
+                        else jnp.logical_and(
+                            jnp.logical_not(use_dense), pop < alpha_thr
+                        )
+                    )
+
+                    def _pull(row):
+                        return channel_phase_reduce_pallas(
+                            problem, pg, row, phase_consts_at(cm_all, m), opts,
+                            active,
+                        )[0]
+
+                    def _push(row):
+                        pcov_m = jax.lax.dynamic_index_in_dim(
+                            push_coverage, m, axis=1, keepdims=False
+                        )  # (1, B, Tp, Wc)
+                        pcnt_m = jax.lax.dynamic_index_in_dim(
+                            push_cm["counts"], m, axis=1, keepdims=False
+                        )  # (1, B)
+                        pactive = fwords.frontier_active_tiles(
+                            pcov_m, gfw, pcnt_m, None
+                        )
+                        return channel_phase_scatter_pallas(
+                            problem, pg, row, phase_consts_at(push_cm, m),
+                            opts, pactive,
+                        )[0]
+
+                    reduced = jax.lax.cond(use_push, _push, _pull, new_row)
+                else:
+                    reduced = channel_phase_reduce_pallas(
+                        problem, pg, new_row, phase_consts_at(cm_all, m), opts,
+                        active,
+                    )[0]  # (Vl,)
                 lab = labels[problem.merge_field]
                 new = dict(labels)
                 new[problem.merge_field] = jnp.minimum(lab, reduced.astype(lab.dtype))

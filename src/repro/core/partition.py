@@ -82,6 +82,23 @@ class PartitionConfig:
     # degree_aware_tiles: virtual rows only pay off when the LPT packer can
     # spread them across row blocks.
     split_threshold: Union[str, int, None] = "auto"  # 'auto' | int | None
+    # push (scatter) direction: a second CSC-style stream of the SAME edges
+    # binned by source block so a narrow frontier streams only its own
+    # out-edges (Beamer direction-optimizing traversal, docs/tile_layout.md
+    # §9). push_block must be a multiple of 32 (frontier-word alignment).
+    # None auto-sizes a block to hold ~2 full edge tiles of the bucket's
+    # average degree: fewer, denser blocks mean a smaller (B, Tp) scatter
+    # grid and less cross-block T padding, while frontier selectivity is
+    # preserved by the per-TILE coverage words (edges are source-sorted
+    # within a block, so each tile covers a narrow source range).
+    build_push: bool = True  # False skips the push stream (pull-only layout)
+    push_block: Optional[int] = None  # gathered sources per push block
+    # push edge-tile width; None = tile_eb. The scatter accumulator is the
+    # whole per-core row (no row blocking), so wider push tiles shrink the
+    # (B, Tp) grid without the load-balance concerns the pull layout's
+    # row-blocked tiles have — on a narrow frontier the grid-step count,
+    # not the per-tile edge work, is what the direction switch is buying.
+    push_eb: Optional[int] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -130,6 +147,21 @@ class PartitionedGraph:
     tile_split_map: Optional[np.ndarray] = None  # (p, l, Vl, S_max) int32, -1 pad
     split_rows: int = 0  # natural (bucket, row) pairs split into > 1 virtual rows
     t_max_unsplit: int = 0  # T the stacked stream would need without splitting
+    # push (scatter) stream: the SAME edge set, re-binned by SOURCE block
+    # (B = ceil(gathered_size / push_block) blocks of push_block gathered
+    # sources each) so a narrow frontier activates only the blocks that
+    # contain frontier sources. Same bit-packed word format, but the dstb
+    # field carries the FULL local destination row in [0, Vl) — the scatter
+    # kernel's accumulator is the whole per-core label row. push_coverage is
+    # tile_coverage_words over the push stream; ANDed against the frontier
+    # it IS the push-mode tile scheduler (docs/tile_layout.md §9).
+    push_word: Optional[np.ndarray] = None  # (p, l, B, Tp, Eb) int32 packed
+    push_word_hi: Optional[np.ndarray] = None  # (p, l, B, Tp, Eb) | None
+    push_counts: Optional[np.ndarray] = None  # (p, l, B) int32 real tiles
+    push_weights: Optional[np.ndarray] = None  # (p, l, B, Tp, Eb) f32 | None
+    push_coverage: Optional[np.ndarray] = None  # (p, l, B, Tp, Wc) uint32
+    push_src_bits: int = 0  # push packed-word regime (0 = push not built)
+    push_block: int = 0  # gathered sources per push block (0 = not built)
 
     @property
     def vertices_per_core(self) -> int:
@@ -172,13 +204,20 @@ class PartitionedGraph:
 
     @property
     def stream_bytes_per_edge(self) -> float:
-        """Index-stream bytes per edge slot of the compressed layout: 4 in the
-        16-bit packed regime (8 in the 32-bit fallback) vs 9 uncompressed
-        (int32 src + int32 dstb + bool valid). Payload weights, when present,
-        add 4 more on both layouts and are excluded here."""
+        """Index-stream bytes per PULL edge slot of the compressed layout: 4
+        in the 16-bit packed regime (8 in the 32-bit fallback) vs 9
+        uncompressed (int32 src + int32 dstb + bool valid). When the push
+        (scatter) stream is built it stores the same edges a second time, so
+        its packed words are charged here too — amortized over the pull
+        slots so records stay comparable across layouts. Payload weights,
+        when present, add 4 more on both layouts and are excluded here."""
         if self.tile_word is None:
             return 0.0
-        return 4.0 * (1 if self.tile_word_hi is None else 2)
+        pull = 4.0 * (1 if self.tile_word_hi is None else 2)
+        if self.push_word is None:
+            return pull
+        push = 4.0 * (1 if self.push_word_hi is None else 2)
+        return pull + push * self.push_word.size / max(self.tile_word.size, 1)
 
     @property
     def skipped_tile_fraction(self) -> float:
@@ -243,23 +282,42 @@ class PartitionedGraph:
             "row_pos": self.tile_row_pos,  # (p, l, Vl) | None
             "split_map": self.tile_split_map,  # (p, l, Vl, S_max) | None
             "coverage": self.tile_coverage,  # (p, l, R, T, Wc) u32 | None
+            "push_word": self.push_word,  # (p, l, B, Tp, Eb) | None
+            "push_word_hi": self.push_word_hi,  # (p, l, B, Tp, Eb) | None
+            "push_counts": self.push_counts,  # (p, l, B) | None
+            "push_w": self.push_weights,  # (p, l, B, Tp, Eb) | None
+            "push_coverage": self.push_coverage,  # (p, l, B, Tp, Wc) | None
         }
         if problem is not None and problem.edge_op != "add":
             arrs["w"] = None
+            arrs["push_w"] = None
         # frontier coverage is only sound for monotone reduces: min and the
         # packed multi-source-BFS word OR. Sum problems must stay dense.
+        # The entire push stream follows the same rule — scattering only the
+        # frontier blocks' out-edges relies on skipped contributions being
+        # already merged, which only holds for idempotent monotone reduces
+        # (sum needs every contribution every iteration: push stays off).
         if problem is not None and problem.reduce_kind not in ("min", "or"):
             arrs["coverage"] = None
+            for k in (
+                "push_word", "push_word_hi", "push_counts",
+                "push_w", "push_coverage",
+            ):
+                arrs[k] = None
         return arrs
 
     @property
     def coverage_bytes_per_edge(self) -> float:
         """Index-stream overhead of the coverage metadata, amortized per edge
         slot: Wc words per (Eb-slot) tile — e.g. 1/32 B/edge at Eb=128,
-        Wc=1 — vs the 4-8 B/edge packed words it lets the engine skip."""
+        Wc=1 — vs the 4-8 B/edge packed words it lets the engine skip. Push
+        coverage words, when built, are counted too (same denominator)."""
         if self.tile_coverage is None or self.tile_word is None:
             return 0.0
-        return 4.0 * self.tile_coverage.size / max(self.tile_word.size, 1)
+        cov = self.tile_coverage.size
+        if self.push_coverage is not None:
+            cov += self.push_coverage.size
+        return 4.0 * cov / max(self.tile_word.size, 1)
 
     @property
     def t_max_reduction(self) -> float:
@@ -406,9 +464,11 @@ def _build_tile_layouts(p, l, vpc, src_gidx, dst_lidx, valid, weights, cfg, sub_
     the engine runs the two-level reduce."""
     from repro.kernels.csr_gather_reduce.ops import (
         choose_src_bits,
+        prepare_push_tiles,
         prepare_tiles,
         split_map_from_row_orig,
         stack_packed_tiles,
+        stack_push_tiles,
         tile_coverage_words,
     )
 
@@ -487,6 +547,65 @@ def _build_tile_layouts(p, l, vpc, src_gidx, dst_lidx, valid, weights, cfg, sub_
                     t = layouts[i][m]
                     if t.row_pos is not None:
                         tile_row_pos[i, m] = t.row_pos
+    push = {}
+    if cfg.build_push:
+        # push (scatter) stream: same edges, binned by SOURCE block. The
+        # packed dstb field holds the FULL local destination row [0, vpc),
+        # so the 16-bit regime additionally needs vpc <= 2^15; an explicit
+        # pack_src_bits=32 forces both streams into the wide regime.
+        push_src_bits = (
+            cfg.pack_src_bits
+            if cfg.pack_src_bits is not None
+            else choose_src_bits(p * sub_size, vpc)
+        )
+        gathered = p * sub_size
+        peb = cfg.push_eb if cfg.push_eb is not None else eb
+        push_block = cfg.push_block
+        if push_block is None:
+            # auto-size: ~2 full push-tile widths of the average bucket
+            # degree per block, 32-aligned, clamped to one gathered block
+            total_edges = int(np.asarray(valid).sum())
+            avg_deg = total_edges / max(p * l, 1) / max(gathered, 1)
+            want = 2.0 * peb / max(avg_deg, 1e-9)
+            push_block = 32 * max(1, int(round(want / 32.0)))
+            push_block = min(push_block, 32 * ((gathered + 31) // 32))
+        push_layouts = [
+            prepare_push_tiles(
+                src_gidx[i, m], dst_lidx[i, m], valid[i, m],
+                gathered_size=gathered,
+                block_sources=push_block,
+                num_rows=vpc, eb=peb,
+                weights=weights[i, m] if weights is not None else None,
+            )
+            for i in range(p)
+            for m in range(l)
+        ]
+        pw, pw_hi, pcnt, pwts = stack_push_tiles(
+            push_layouts, src_bits=push_src_bits
+        )
+        b_blocks, tp_max = pw.shape[1], pw.shape[2]
+        push_word = pw.reshape(p, l, b_blocks, tp_max, peb)
+        push_word_hi = (
+            pw_hi.reshape(p, l, b_blocks, tp_max, peb)
+            if pw_hi is not None
+            else None
+        )
+        push = dict(
+            push_word=push_word,
+            push_word_hi=push_word_hi,
+            push_counts=pcnt.reshape(p, l, b_blocks),
+            push_weights=(
+                pwts.reshape(p, l, b_blocks, tp_max, peb)
+                if pwts is not None
+                else None
+            ),
+            push_coverage=tile_coverage_words(
+                push_word, push_word_hi,
+                src_bits=push_src_bits, p=p, sub_size=sub_size,
+            ),
+            push_src_bits=push_src_bits,
+            push_block=push_block,
+        )
     return dict(
         tile_word=tile_word,
         tile_word_hi=tile_word_hi,
@@ -500,6 +619,7 @@ def _build_tile_layouts(p, l, vpc, src_gidx, dst_lidx, valid, weights, cfg, sub_
         tile_split_map=tile_split_map,
         split_rows=split_rows,
         t_max_unsplit=t_max_unsplit,
+        **push,
     )
 
 

@@ -67,7 +67,11 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["gather_reduce_pallas", "gather_reduce_cores_pallas"]
+__all__ = [
+    "gather_reduce_pallas",
+    "gather_reduce_cores_pallas",
+    "scatter_reduce_cores_pallas",
+]
 
 
 def _or_fold(x):
@@ -338,6 +342,136 @@ def gather_reduce_cores_pallas(
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(p, r_blocks, t_tiles),
+        in_specs=in_specs,
+        out_specs=out_spec,
+    )
+    args = (
+        (word,)
+        + ((word_hi,) if has_hi else ())
+        + ((weights,) if has_w else ())
+        + (payload,)
+    )
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(out_shape, payload.dtype),
+        interpret=interpret,
+        compiler_params=dict(
+            mosaic=dict(dimension_semantics=("arbitrary", "arbitrary", "arbitrary"))
+        )
+        if not interpret
+        else None,
+    )((fetch if has_fetch else counts).astype(jnp.int32), *args)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "num_rows", "src_bits", "kind", "edge_op", "identity", "interpret"
+    ),
+)
+def scatter_reduce_cores_pallas(
+    payload: jnp.ndarray,  # (G,) phase-gathered crossbar block, shared by cores
+    word: jnp.ndarray,  # (p, B, Tp, Eb) int32 packed PUSH edge words
+    counts: jnp.ndarray,  # (p, B) int32 real edge tiles per (core, src block)
+    word_hi: jnp.ndarray | None = None,  # (p, B, Tp, Eb) int32, src_bits=32 only
+    weights: jnp.ndarray | None = None,  # (p, B, Tp, Eb) f32 (edge_op == 'add')
+    fetch: jnp.ndarray | None = None,  # (p, B, Tp) int32 dynamic fetch map
+    *,
+    num_rows: int,  # rows per core (= vertices_per_core)
+    src_bits: int = 16,
+    kind: str = "min",
+    edge_op: str = "none",
+    identity: float = 0.0,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Push-mode (scatter) accumulator over the SOURCE-binned stream: grid
+    (p, B, Tp) -> (p, num_rows) reductions.
+
+    The mirror of ``gather_reduce_cores_pallas`` with the binning axis
+    flipped: tiles are grouped by 32-aligned SOURCE block instead of
+    destination row block, so a narrow frontier — the regime the pull
+    coverage words go dense in — activates only the few blocks that contain
+    frontier sources, and ``fetch`` (the frontier-ANDed active map over the
+    push stream's own coverage words) elides everything else. The price is
+    that a tile's destinations are arbitrary: the accumulator is the WHOLE
+    per-core label row (num_rows resident in VMEM instead of vb), written
+    once after the full (B, Tp) sweep, and the packed dstb field carries the
+    full local row index. Only idempotent monotone reduces are admitted —
+    scatter order across blocks is arbitrary, and skipped blocks rely on
+    their contributions being already merged; both hold for min/or, neither
+    for sum (docs/tile_layout.md §9).
+
+    There is no level-2 fold here: hub-row splitting is a pull-layout
+    construct (it caps per-row-block T), and the push accumulator's rows are
+    natural rows by construction, so the engine consumes this output
+    directly — the two-level shape of §5 degenerates to level 1 only.
+    """
+    assert kind in ("min", "or"), f"push scatter requires min/or, got {kind!r}"
+    p, b_blocks, t_tiles, eb = word.shape
+    assert counts.shape == (p, b_blocks), (counts.shape, (p, b_blocks))
+    assert (word_hi is not None) == (src_bits == 32), (src_bits, word_hi is None)
+    if fetch is not None:
+        assert fetch.shape == (p, b_blocks, t_tiles), fetch.shape
+    g = payload.shape[0]
+    lane_dim = payload.shape[1] if payload.ndim == 2 else None
+    has_hi = word_hi is not None
+    has_w = weights is not None
+    has_fetch = fetch is not None
+
+    def kern(cnt_ref, *refs):
+        refs = list(refs)
+        word_ref = refs.pop(0)
+        hi_ref = refs.pop(0) if has_hi else None
+        w_ref = refs.pop(0) if has_w else None
+        payload_ref, out_ref = refs
+        c, b, t = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+
+        @pl.when((b == 0) & (t == 0))
+        def _init():  # accumulator resident across the whole (B, Tp) sweep
+            out_ref[...] = jnp.full_like(out_ref[...], identity)
+
+        run = cnt_ref[c, b, t] == t if has_fetch else t < cnt_ref[c, b]
+
+        @pl.when(run)
+        def _work():
+            wd = word_ref[0, 0, 0, :]
+            hi = hi_ref[0, 0, 0, :] if hi_ref is not None else None
+            src, dst, val = _unpack_word(wd, hi, src_bits)
+            w = w_ref[0, 0, 0, :] if w_ref is not None else None
+            acc = out_ref[0]
+            out_ref[0] = _accumulate(
+                kind, edge_op, payload_ref[...], src, dst, val, w, acc,
+                identity, num_rows,
+            )
+
+    # same fetch-elision clamp as the pull kernel: skipped grid steps re-name
+    # an already-fetched edge block, so they cost no HBM traffic.
+    def edge_idx(c, b, t, cnt):
+        if has_fetch:
+            return (c, b, jnp.maximum(cnt[c, b, t], 0), 0)
+        return (c, b, jnp.minimum(t, jnp.maximum(cnt[c, b] - 1, 0)), 0)
+
+    edge_block = pl.BlockSpec((1, 1, 1, eb), edge_idx)
+    if lane_dim is None:
+        payload_spec = pl.BlockSpec((g,), lambda c, b, t, cnt: (0,))
+        out_spec = pl.BlockSpec((1, num_rows), lambda c, b, t, cnt: (c, 0))
+        out_shape = (p, num_rows)
+    else:  # scratch pad + output carry the lane axis whole (§8)
+        payload_spec = pl.BlockSpec((g, lane_dim), lambda c, b, t, cnt: (0, 0))
+        out_spec = pl.BlockSpec(
+            (1, num_rows, lane_dim), lambda c, b, t, cnt: (c, 0, 0)
+        )
+        out_shape = (p, num_rows, lane_dim)
+    in_specs = (
+        [edge_block]
+        + ([edge_block] if has_hi else [])
+        + ([edge_block] if has_w else [])
+        + [payload_spec]
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(p, b_blocks, t_tiles),
         in_specs=in_specs,
         out_specs=out_spec,
     )

@@ -28,10 +28,13 @@ from repro.kernels.csr_gather_reduce.ref import gather_reduce_reference
 
 __all__ = [
     "TileLayout",
+    "PushTileLayout",
     "prepare_tiles",
+    "prepare_push_tiles",
     "choose_src_bits",
     "pack_edge_words",
     "stack_packed_tiles",
+    "stack_push_tiles",
     "tile_coverage_words",
     "split_map_from_row_orig",
     "combine_split_rows",
@@ -176,6 +179,118 @@ def tile_coverage_words(
         np.left_shift(np.uint32(1), (wsel % 32).astype(np.uint32)),
     )
     return cov
+
+
+@dataclasses.dataclass(frozen=True)
+class PushTileLayout:
+    """One bucket's CSC-style push (scatter) tiles, binned by SOURCE block.
+
+    The pull layout bins edges by destination row block so the kernel's
+    accumulator is a pure function of the grid; the push layout bins the SAME
+    edge set by source block ``b = gidx // block_sources`` so a NARROW
+    frontier maps to few tiles: every out-edge of the 32-aligned source group
+    ``[b * bs, (b+1) * bs)`` lives in block b's tiles, and a frontier that
+    touches no source of a block never streams it. ``dst`` carries the FULL
+    local destination index in [0, num_rows) — the scatter kernel's output is
+    the whole per-core label row, so there is no row-block offset to strip.
+    """
+
+    src: np.ndarray  # (B, Tp, Eb) int32 gathered-block offsets
+    dst: np.ndarray  # (B, Tp, Eb) int32 FULL local dst in [0, num_rows)
+    valid: np.ndarray  # (B, Tp, Eb) bool
+    weights: np.ndarray | None  # (B, Tp, Eb) f32
+    tile_counts: np.ndarray  # (B,) int32 real edge tiles per source block
+    block_sources: int
+    num_rows: int
+
+
+def prepare_push_tiles(
+    src_gidx: np.ndarray,  # (E,) int32 gathered-block offsets
+    dst_lidx: np.ndarray,  # (E,) int32 local dst in [0, num_rows)
+    valid: np.ndarray,  # (E,) bool
+    *,
+    gathered_size: int,
+    block_sources: int,
+    num_rows: int,
+    eb: int,
+    weights: np.ndarray | None = None,
+) -> PushTileLayout:
+    """Bin one (core, phase) bucket's edges by source block for the push
+    (scatter) stream. ``block_sources`` must be a multiple of 32 so every
+    block covers whole frontier words and the coverage-word activity test
+    (``tile_coverage_words`` on the push stream) is exact at block
+    granularity. Edges inside a block are ordered (src, dst) — the order is
+    irrelevant for the min/or reduces the push path admits (associative,
+    commutative, idempotent), but a deterministic layout keeps partitions
+    reproducible."""
+    assert block_sources % 32 == 0, block_sources
+    keep = np.asarray(valid)
+    src = np.asarray(src_gidx)[keep].astype(np.int64)
+    dst = np.asarray(dst_lidx)[keep].astype(np.int64)
+    w = np.asarray(weights)[keep] if weights is not None else None
+    n_blocks = max(1, -(-gathered_size // block_sources))
+    blk = src // block_sources
+    order = np.lexsort((dst, src))  # blk is src // bs, so this is block-major
+    src, dst, blk = src[order], dst[order], blk[order]
+    if w is not None:
+        w = w[order]
+    counts = np.bincount(blk, minlength=n_blocks)
+    t_tiles = max(1, int(-(-counts.max() // eb))) if counts.size else 1
+    src_t = np.zeros((n_blocks, t_tiles, eb), dtype=np.int32)
+    dst_t = np.zeros((n_blocks, t_tiles, eb), dtype=np.int32)
+    val_t = np.zeros((n_blocks, t_tiles, eb), dtype=bool)
+    w_t = (
+        np.zeros((n_blocks, t_tiles, eb), dtype=np.float32)
+        if w is not None
+        else None
+    )
+    starts = np.zeros(n_blocks + 1, dtype=np.int64)
+    np.cumsum(counts, out=starts[1:])
+    for b in range(n_blocks):
+        s, e = int(starts[b]), int(starts[b + 1])
+        n = e - s
+        src_t[b].reshape(-1)[:n] = src[s:e]
+        dst_t[b].reshape(-1)[:n] = dst[s:e]
+        val_t[b].reshape(-1)[:n] = True
+        if w_t is not None:
+            w_t[b].reshape(-1)[:n] = w[s:e]
+    return PushTileLayout(
+        src=src_t, dst=dst_t, valid=val_t, weights=w_t,
+        tile_counts=(-(-counts // eb)).astype(np.int32),
+        block_sources=block_sources, num_rows=num_rows,
+    )
+
+
+def stack_push_tiles(
+    layouts: list[PushTileLayout], *, src_bits: int
+) -> tuple[np.ndarray, np.ndarray | None, np.ndarray, np.ndarray | None]:
+    """Pack + stack per-bucket push layouts to one uniform (n, B, Tp, Eb)
+    compressed scatter stream: ``(word, word_hi, counts, weights)``. Every
+    bucket shares B (the gathered block size is phase-invariant); Tp is
+    padded to the max, and ``counts`` tells the kernel which tiles are real —
+    the exact mirror of ``stack_packed_tiles`` for the pull stream. The
+    packed ``dstb`` field holds the FULL local destination row, so the
+    16-bit regime additionally requires ``num_rows <= 2^15`` (the caller
+    picks ``src_bits`` via ``choose_src_bits(gathered_size, num_rows)``)."""
+    n = len(layouts)
+    eb = layouts[0].src.shape[2]
+    b_max = max(t.src.shape[0] for t in layouts)
+    t_max = max(t.src.shape[1] for t in layouts)
+    word = np.zeros((n, b_max, t_max, eb), np.int32)
+    word_hi = np.zeros((n, b_max, t_max, eb), np.int32) if src_bits == 32 else None
+    counts = np.zeros((n, b_max), np.int32)
+    any_w = any(t.weights is not None for t in layouts)
+    weights = np.zeros((n, b_max, t_max, eb), np.float32) if any_w else None
+    for i, t in enumerate(layouts):
+        bb, tt = t.src.shape[:2]
+        w0, w1 = pack_edge_words(t.src, t.dst, t.valid, src_bits=src_bits)
+        word[i, :bb, :tt] = w0
+        if word_hi is not None:
+            word_hi[i, :bb, :tt] = w1
+        counts[i, :bb] = t.tile_counts
+        if weights is not None and t.weights is not None:
+            weights[i, :bb, :tt] = t.weights
+    return word, word_hi, counts, weights
 
 
 @dataclasses.dataclass(frozen=True)

@@ -293,6 +293,16 @@ def test_engine_three_way(pname, force_bits, rng):
             )
 
 
+def _expected_stream_bpe(pg):
+    """Mirror of the accounting contract: pull packed words plus the push
+    stream's packed words amortized over pull edge slots."""
+    pull = 4.0 * (1 if pg.tile_word_hi is None else 2)
+    if pg.push_word is None:
+        return pull
+    push = 4.0 * (1 if pg.push_word_hi is None else 2)
+    return pull + push * pg.push_word.size / pg.tile_word.size
+
+
 def test_partition_auto_selects_32bit_fallback():
     """p * sub_size > 2^16 flips the regime without being asked to."""
     g = G.rmat(17, 1, seed=3)  # 131072 vertices
@@ -300,14 +310,26 @@ def test_partition_auto_selects_32bit_fallback():
     assert pg.gathered_size > SRC16_LIMIT
     assert pg.src_bits == 32
     assert pg.tile_word_hi is not None
-    assert pg.stream_bytes_per_edge == 8.0
+    # push stream built by default: bytes/edge = pull 8.0 + amortized push
+    assert pg.push_word is not None
+    assert pg.stream_bytes_per_edge == _expected_stream_bpe(pg)
+    assert pg.stream_bytes_per_edge > 8.0
+    # opting out of the push layout restores the exact pull-only figure
+    pg_pull = partition_2d(g, PartitionConfig(p=2, l=1, build_push=False))
+    assert pg_pull.push_word is None
+    assert pg_pull.stream_bytes_per_edge == 8.0
 
 
 def test_stream_metrics_16bit_regime():
     g = G.symmetrize(G.rmat(9, 8, seed=5))
     pg = partition_2d(g, PartitionConfig(p=4, l=4, lane=8))
     assert pg.src_bits == 16 and pg.tile_word_hi is None
-    assert pg.stream_bytes_per_edge == 4.0
+    assert pg.stream_bytes_per_edge == _expected_stream_bpe(pg)
     assert 0.0 <= pg.skipped_tile_fraction < 1.0
     # counts never exceed the uniform T the stream was padded to
     assert int(pg.tile_counts.max()) <= pg.tile_word.shape[3]
+    pg_pull = partition_2d(g, PartitionConfig(p=4, l=4, lane=8,
+                                              build_push=False))
+    assert pg_pull.stream_bytes_per_edge == 4.0
+    # push coverage words are charged to the coverage overhead metric
+    assert pg.coverage_bytes_per_edge > pg_pull.coverage_bytes_per_edge

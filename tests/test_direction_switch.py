@@ -1,0 +1,380 @@
+"""Direction-optimizing traversal (ISSUE 8): push-mode scatter engine with
+per-iteration push/pull switching.
+
+Equivalence contract: for min/or problems, every direction policy — pull-only
+(the PR 6 schedule byte-for-byte), forced push, and the Beamer alpha/beta
+'auto' switch — produces labels AND iteration counts bit-identical to the XLA
+oracle, across the fused engine, the distributed engine, and the
+frontier-compressed engine. Sum problems stay pull-only (scatter order across
+skipped source blocks is arbitrary; only idempotent monotone reduces admit
+it), so ``direction='push'`` on PageRank must raise.
+
+Structural contract (mirror of the laneless-stream proof): a forced-push
+iteration materializes NO per-phase (p, R, T, Eb) pull-side gather slice —
+the push stream's source-binned (p, B, Tp, Ebp) slice is the only edge-word
+intermediate — checked on the fused jaxpr here and on the distributed
+shard_map jaxpr in the check-dist job.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+import repro.core.graph as G
+from repro.core import frontier_words as fwords
+from repro.core.engine import (
+    EngineOptions,
+    _make_iteration,
+    prepare_labels,
+    run,
+    run_frontier_trace,
+)
+from repro.core.partition import PartitionConfig, partition_2d
+from repro.core.problems import bfs, bfs_multi, pagerank, sssp, wcc
+from repro.data.synthetic import path_grid_graph
+
+from test_distributed import PRELUDE, run_sub
+
+CFG = dict(p=2, l=2, lane=8, tile_vb=32, tile_eb=32)
+
+
+def _shuffled_path(width=256, seed=11):
+    return path_grid_graph(width, 1, shuffle=True, seed=seed)
+
+
+def _weighted_rmat(seed=11):
+    rng = np.random.default_rng(seed)
+    g0 = G.symmetrize(G.rmat(8, 6, seed=seed))
+    w = (rng.random(g0.num_edges) + 0.1).astype(np.float32)
+    return G.COOGraph(src=g0.src, dst=g0.dst, num_vertices=g0.num_vertices,
+                      weights=w)
+
+
+def _bulge_graph(length=108, fan=20, at=54, seed=7):
+    """A shuffled path with a ``fan``-leaf bulge at hop ``at``: the BFS
+    wavefront popcount runs thin (1-3 bits), spikes to ~fan+1 when the hub is
+    reached, then runs thin again — the deterministic band-crossing the
+    hysteresis test needs. Returns (graph, root) with root at the path end."""
+    src = list(range(length - 1)) + [at] * fan
+    dst = list(range(1, length)) + list(range(length, length + fan))
+    src, dst = np.asarray(src), np.asarray(dst)
+    s, d = np.concatenate([src, dst]), np.concatenate([dst, src])
+    n = length + fan
+    perm = np.random.default_rng(seed).permutation(n).astype(np.uint32)
+    g = G.COOGraph(src=perm[s], dst=perm[d], num_vertices=n)
+    return g, int(perm[0])
+
+
+def _assert_same_labels(prob, res, ref):
+    for k in ref.labels:
+        np.testing.assert_array_equal(
+            np.asarray(res.labels[k]), np.asarray(ref.labels[k]))
+    assert res.iterations == ref.iterations, (res.iterations, ref.iterations)
+
+
+# ---------------------------------------------------------------------------
+# forced-direction override: every policy is bit-identical for min/or
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("gname", ["path", "rmat"])
+def test_forced_direction_bit_identical_min_problems(gname):
+    if gname == "path":
+        g, root = _shuffled_path(), 0
+    else:
+        g, root = G.symmetrize(G.rmat(8, 6, seed=13)), 3
+    pg = partition_2d(g, PartitionConfig(**CFG))
+    for prob in (bfs(root), wcc()):
+        ref = run(prob, g, pg, EngineOptions(backend="xla"))
+        for d in ("pull", "auto", "push"):
+            res = run(prob, g, pg, EngineOptions(direction=d))
+            _assert_same_labels(prob, res, ref)
+
+
+def test_forced_push_sssp_bit_identical():
+    g = _weighted_rmat()
+    pg = partition_2d(g, PartitionConfig(**CFG))
+    prob = sssp(3)
+    ref = run(prob, g, pg, EngineOptions(backend="xla"))
+    for d in ("pull", "auto", "push"):
+        _assert_same_labels(prob, run(prob, g, pg, EngineOptions(direction=d)),
+                            ref)
+
+
+def test_forced_push_or_problem_lane_rows():
+    """Packed multi-source BFS ('or' reduce): a push pass scatters each
+    changed vertex's whole K-wide lane row; every dist column must still
+    match the single-root runs."""
+    g = _shuffled_path(128, seed=5)
+    roots = [0, 31, 77, 90]
+    pg = partition_2d(g, PartitionConfig(**CFG))
+    prob = bfs_multi(roots)
+    ref = run(prob, g, pg, EngineOptions(direction="pull"))
+    for d in ("auto", "push"):
+        res = run(prob, g, pg, EngineOptions(direction=d))
+        _assert_same_labels(prob, res, ref)
+    dist = np.asarray(ref.labels["dist"])
+    for j, r in enumerate(roots):
+        single = run(bfs(r), g, pg, EngineOptions(direction="push"))
+        np.testing.assert_array_equal(dist[:, j], single.labels["label"])
+
+
+def test_forced_push_requires_admissible_path():
+    g = _shuffled_path(128, seed=5)
+    pg = partition_2d(g, PartitionConfig(**CFG))
+    # sum stays pull-only: scatter order across skipped blocks reassociates
+    with pytest.raises(ValueError, match="push"):
+        run(pagerank(tol=1e-4), g, pg, EngineOptions(direction="push"))
+    # no partition-time push stream
+    pg_nopush = partition_2d(g, PartitionConfig(**CFG, build_push=False))
+    with pytest.raises(ValueError, match="push"):
+        run(bfs(0), g, pg_nopush, EngineOptions(direction="push"))
+    # dynamic scheduling off: the frontier carry feeds switch + active map
+    with pytest.raises(ValueError, match="push"):
+        run(bfs(0), g, pg, EngineOptions(direction="push",
+                                         dynamic_tile_skip=False))
+    with pytest.raises(ValueError, match="direction"):
+        EngineOptions(direction="sideways")
+    with pytest.raises(ValueError, match="alpha"):
+        EngineOptions(direction_alpha=0.5, direction_beta=0.1)
+    # ...but 'auto' on a pull-only partition silently stays pull
+    res = run(bfs(0), g, pg_nopush, EngineOptions(direction="auto"))
+    ref = run(bfs(0), g, pg_nopush, EngineOptions(direction="pull"))
+    _assert_same_labels(bfs(0), res, ref)
+
+
+# ---------------------------------------------------------------------------
+# degenerate frontiers: all-push and all-pull runs
+# ---------------------------------------------------------------------------
+
+
+def test_all_push_run_start_narrow():
+    """alpha = beta = 2.0: every popcount (even iteration 0's full frontier)
+    sits below the threshold, so every iteration takes the push arm."""
+    g, root = _shuffled_path(128, seed=5), 0
+    pg = partition_2d(g, PartitionConfig(**CFG))
+    opts = EngineOptions(direction="auto", direction_alpha=2.0,
+                         direction_beta=2.0)
+    trace = run_frontier_trace(bfs(root), g, pg, opts)
+    assert set(trace["direction"]) == {"push"}, trace["direction"][:6]
+    assert trace["push_iterations"] == trace["iterations"]
+    ref = run(bfs(root), g, pg, EngineOptions(backend="xla"))
+    np.testing.assert_array_equal(
+        np.asarray(trace["labels"]["label"]), np.asarray(ref.labels["label"]))
+    assert trace["iterations"] == ref.iterations
+
+
+def test_all_pull_dense_frontier():
+    # natural: BFS from the hub of a symmetrized pure star floods every leaf
+    # in iteration 0 and converges on the wide frontier — the popcount never
+    # drops into the push band
+    g = G.symmetrize(G.star(256))
+    pg = partition_2d(g, PartitionConfig(**CFG))
+    trace = run_frontier_trace(bfs(0), g, pg, EngineOptions(direction="auto"))
+    assert set(trace["direction"]) == {"pull"}, trace["direction"]
+    assert trace["push_iterations"] == 0
+    # degenerate thresholds: alpha = beta = 0 can never fire (pop < 0 is
+    # false), so 'auto' runs pull-only even on a thin wavefront
+    gp, root = _shuffled_path(128, seed=5), 0
+    pgp = partition_2d(gp, PartitionConfig(**CFG))
+    opts = EngineOptions(direction="auto", direction_alpha=0.0,
+                         direction_beta=0.0)
+    tr = run_frontier_trace(bfs(root), gp, pgp, opts)
+    assert set(tr["direction"]) == {"pull"}
+    ref = run(bfs(root), gp, pgp, EngineOptions(direction="pull"))
+    np.testing.assert_array_equal(
+        np.asarray(tr["labels"]["label"]), np.asarray(ref.labels["label"]))
+    assert tr["iterations"] == ref.iterations
+
+
+# ---------------------------------------------------------------------------
+# the alpha/beta hysteresis band
+# ---------------------------------------------------------------------------
+
+
+def test_switch_hysteresis_stays_push_inside_band():
+    """The bulge graph's popcount spikes into (alpha_thr, beta_thr) mid-run:
+    with the band, hysteresis holds the push direction through the spike;
+    with beta == alpha (no band), the same spike flips the engine back to
+    pull for those iterations — and both runs stay bit-identical."""
+    g, root = _bulge_graph()
+    pg = partition_2d(g, PartitionConfig(**CFG))
+    total_bits = pg.p * pg.l * pg.sub_size
+    alpha = 8.5 / total_bits   # thr ~8: above the thin wavefront (1-3 bits)
+    beta = 34.5 / total_bits   # thr ~34: above the ~21-bit bulge spike
+    assert int(total_bits * alpha) > 4
+    assert int(total_bits * alpha) < 21 < int(total_bits * beta)
+    hyst = run_frontier_trace(
+        bfs(root), g, pg,
+        EngineOptions(direction="auto", direction_alpha=alpha,
+                      direction_beta=beta))
+    flat = run_frontier_trace(
+        bfs(root), g, pg,
+        EngineOptions(direction="auto", direction_alpha=alpha,
+                      direction_beta=alpha))
+    # iteration 0 always pulls (full frontier); the band then holds push
+    # through the bulge spike...
+    assert hyst["direction"][0] == "pull"
+    assert set(hyst["direction"][1:]) == {"push"}, hyst["direction"]
+    # ...while the no-band run flips back to pull at the spike and re-enters
+    # push after it
+    mid = flat["direction"][1:]
+    assert "pull" in mid, flat["direction"]
+    first_pull = 1 + mid.index("pull")
+    assert "push" in flat["direction"][1:first_pull], flat["direction"]
+    assert "push" in flat["direction"][first_pull:], flat["direction"]
+    # both policies are schedule-only: identical labels and iteration counts
+    np.testing.assert_array_equal(np.asarray(hyst["labels"]["label"]),
+                                  np.asarray(flat["labels"]["label"]))
+    assert hyst["iterations"] == flat["iterations"]
+
+
+def test_multi_query_union_popcount_shifts_crossover():
+    """K lanes switch per batch on the UNION popcount against a threshold
+    scaled by 1/K: the same graph that runs all-push at K=1 falls back to
+    pull for most iterations at K=4 (union frontier ~K-wide, threshold
+    K-fold lower)."""
+    g = _shuffled_path(256, seed=11)
+    pg = partition_2d(g, PartitionConfig(**CFG))
+    total_bits = pg.p * pg.l * pg.sub_size
+    alpha = 12.5 / total_bits  # K=1 thr ~12; K=4 thr ~3
+    opts = EngineOptions(direction="auto", direction_alpha=alpha,
+                         direction_beta=alpha)
+    tr1 = run_frontier_trace(bfs(0), g, pg, opts)
+    tr4 = run_frontier_trace(bfs_multi([0, 64, 128, 192]), g, pg, opts)
+    frac1 = tr1["push_iterations"] / tr1["iterations"]
+    frac4 = tr4["push_iterations"] / tr4["iterations"]
+    assert frac1 > 0.9, (tr1["push_iterations"], tr1["iterations"])
+    assert frac4 < 0.5 * frac1, (frac4, frac1)
+
+
+# ---------------------------------------------------------------------------
+# structural: a push iteration reads no pull-side gather slice
+# ---------------------------------------------------------------------------
+
+
+def _aval_shapes(fn, *args):
+    jaxpr = jax.make_jaxpr(fn)(*args)
+    shapes = set()
+
+    def walk(jp):
+        for vs in (jp.invars, jp.constvars):
+            for v in vs:
+                if hasattr(v, "aval") and hasattr(v.aval, "shape"):
+                    shapes.add((tuple(v.aval.shape), str(v.aval.dtype)))
+        for eqn in jp.eqns:
+            for v in eqn.outvars:
+                if hasattr(v, "aval") and hasattr(v.aval, "shape"):
+                    shapes.add((tuple(v.aval.shape), str(v.aval.dtype)))
+            for sub in jax.core.jaxprs_in_params(eqn.params):
+                walk(sub.jaxpr if hasattr(sub, "jaxpr") else sub)
+
+    walk(jaxpr.jaxpr)
+    return shapes
+
+
+def test_push_iteration_jaxpr_has_no_pull_gather():
+    """push_eb != tile_eb makes the two streams' slice shapes disjoint, so
+    the assertion is unambiguous: the forced-push iteration's jaxpr carries
+    the (p, B, Tp, Ebp) push slice and NO (p, R, T, Eb) pull slice — the
+    dense pull-side gather never materializes."""
+    g = _shuffled_path(128, seed=5)
+    pg = partition_2d(g, PartitionConfig(**CFG, push_eb=128))
+    pull_slice = (pg.p,) + pg.tile_word.shape[2:]
+    push_slice = (pg.p,) + pg.push_word.shape[2:]
+    assert pull_slice[-1] != push_slice[-1]  # disjoint by construction
+    prob = bfs(0)
+    labels = prepare_labels(prob, g, pg)
+    fw0 = fwords.full_frontier_words(pg.l, pg.sub_size, lead=(pg.p,))
+    shapes = _aval_shapes(
+        _make_iteration(prob, pg, EngineOptions(direction="push")),
+        labels, fw0, jnp.bool_(False))
+    assert (push_slice, "int32") in shapes, sorted(shapes)
+    assert (pull_slice, "int32") not in shapes, pull_slice
+    # the auto iteration carries BOTH arms (the lax.cond chooses at runtime)
+    shapes_auto = _aval_shapes(
+        _make_iteration(prob, pg, EngineOptions(direction="auto")),
+        labels, fw0, jnp.bool_(False))
+    assert (push_slice, "int32") in shapes_auto
+    assert (pull_slice, "int32") in shapes_auto
+
+
+def test_push_jaxpr_distributed_no_pull_gather():
+    """The same structural proof on the sharded engine: inside the shard_map
+    body the per-channel forced-push iteration slices the (1, B, Tp, Ebp)
+    push shard and never the (1, R, T, Eb) pull shard."""
+    run_sub(
+        PRELUDE
+        + """
+from repro.core.distributed import build_distributed_run
+from repro.core.engine import EngineOptions, prepare_labels
+from repro.core.partition import PartitionConfig, partition_2d
+from repro.core.problems import bfs
+from repro.data.synthetic import path_grid_graph
+
+g = path_grid_graph(128, 1, shuffle=True, seed=5)
+pg = partition_2d(g, PartitionConfig(p=4, l=2, lane=8, tile_vb=32,
+                                     tile_eb=32, push_eb=128))
+prob = bfs(0)
+run_fn = build_distributed_run(prob, pg, mesh4,
+                               opts=EngineOptions(direction="push"))
+labels = prepare_labels(prob, g, pg)
+jaxpr = jax.make_jaxpr(run_fn.traceable)(labels)
+
+shapes = set()
+def walk(jp):
+    for vs in (jp.invars, jp.constvars):
+        for v in vs:
+            if hasattr(v, "aval") and hasattr(v.aval, "shape"):
+                shapes.add((tuple(v.aval.shape), str(v.aval.dtype)))
+    for eqn in jp.eqns:
+        for v in eqn.outvars:
+            if hasattr(v, "aval") and hasattr(v.aval, "shape"):
+                shapes.add((tuple(v.aval.shape), str(v.aval.dtype)))
+        for sub in jax.core.jaxprs_in_params(eqn.params):
+            walk(sub.jaxpr if hasattr(sub, "jaxpr") else sub)
+walk(jaxpr.jaxpr)
+
+pull_slice = (1,) + pg.tile_word.shape[2:]
+push_slice = (1,) + pg.push_word.shape[2:]
+assert pull_slice[-1] != push_slice[-1]
+assert (push_slice, "int32") in shapes, sorted(shapes)
+assert (pull_slice, "int32") not in shapes, pull_slice
+print("OK")
+"""
+    )
+
+
+# ---------------------------------------------------------------------------
+# distributed + frontier-compressed engines: same switch, same bits
+# ---------------------------------------------------------------------------
+
+
+def test_direction_switch_distributed_and_frontier_equiv():
+    run_sub(
+        PRELUDE
+        + """
+from repro.core.distributed import run_distributed
+from repro.core.engine import EngineOptions, run
+from repro.core.frontier import run_distributed_frontier
+from repro.core.partition import PartitionConfig, partition_2d
+from repro.core.problems import bfs, wcc
+from repro.data.synthetic import path_grid_graph
+
+g = path_grid_graph(96, 4, shuffle=True, seed=5)
+pg = partition_2d(g, PartitionConfig(p=4, l=2, lane=8, tile_vb=32,
+                                     tile_eb=32))
+for prob in (bfs(0), wcc()):
+    ref = run(prob, g, pg, EngineOptions(backend="xla"))
+    for d in ("pull", "auto", "push"):
+        opts = EngineOptions(direction=d)
+        rd = run_distributed(prob, g, pg, mesh4, opts=opts)
+        rf, _ = run_distributed_frontier(prob, g, pg, mesh4, opts=opts)
+        for r in (rd, rf):
+            for k in ref.labels:
+                assert np.array_equal(r.labels[k], ref.labels[k]), (d, k)
+            assert r.iterations == ref.iterations, (d, r.iterations)
+print("OK")
+"""
+    )

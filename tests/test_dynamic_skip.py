@@ -37,7 +37,11 @@ from repro.core.partition import PartitionConfig, partition_2d
 from repro.core.problems import bfs, pagerank, sssp, wcc
 from repro.data.synthetic import path_grid_graph, skewed_graph
 
-_DYN = EngineOptions(backend="pallas")  # dynamic_tile_skip defaults on
+# dynamic_tile_skip defaults on; direction pinned to pull because this
+# file asserts PULL-schedule stats (dense fallback, skipped-tile
+# fractions) — under the default 'auto' narrow tails take the push arm
+# and report the push stream's fractions (tests/test_direction_switch.py)
+_DYN = EngineOptions(backend="pallas", direction="pull")
 _STA = EngineOptions(backend="pallas", dynamic_tile_skip=False)
 _XLA = EngineOptions(backend="xla")
 
