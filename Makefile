@@ -4,7 +4,7 @@ export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 # unpinned probe of the absent TPU can hang multi-device collectives)
 export JAX_PLATFORMS ?= cpu
 
-.PHONY: test bench-smoke bench-engine bench check check-dist
+.PHONY: test bench-smoke serve-smoke bench-engine bench check check-dist
 
 # tier-1 verify (ROADMAP.md)
 test:
@@ -23,6 +23,13 @@ check-dist:
 bench-smoke:
 	$(PYTHON) -m benchmarks.bench_engine --smoke
 
+# always-on serving smoke: delta-retiled resident partition must match a
+# from-scratch repartition bit-for-bit, then serving metrics (latency/QPS/
+# steady batch budget) land in BENCH_engine.json under "serving"
+serve-smoke:
+	$(PYTHON) -m repro.launch.serve --arch graph --smoke
+	$(PYTHON) -m benchmarks.bench_engine --serve-smoke
+
 # full engine comparison incl. skew suite -> BENCH_engine.json
 bench-engine:
 	$(PYTHON) -m benchmarks.bench_engine
@@ -31,4 +38,4 @@ bench-engine:
 bench:
 	$(PYTHON) -m benchmarks.run
 
-check: test bench-smoke check-dist
+check: test bench-smoke serve-smoke check-dist

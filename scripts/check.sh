@@ -23,6 +23,14 @@ python -m pytest -x -q
 # schedule); full timings are `make bench-engine`.
 python -m benchmarks.bench_engine --smoke
 
+# always-on serving smoke (docs/serving.md): a bounded mixed-op query stream
+# with mid-stream delta ingest — asserts the delta-retiled resident partition
+# answers (and BFS/WCC/SSSP labels) match a from-scratch repartition
+# bit-for-bit, then the bench variant records serving metrics into
+# BENCH_engine.json under "serving" and asserts the steady BFS batch budget.
+python -m repro.launch.serve --arch graph --smoke
+python -m benchmarks.bench_engine --serve-smoke
+
 # sharded job (make check-dist): distributed engine + repro.dist suites under
 # 8 simulated memory channels — the un-skipped test_distributed /
 # test_elastic / test_fault_tolerance files plus the equivalence suite and

@@ -98,6 +98,7 @@ __all__ = [
     "run_frontier_trace",
     "unpad_labels",
     "make_iteration",
+    "evict_from_cache",
     "dynamic_skip_enabled",
     "push_enabled",
     "channel_phase_reduce_pallas",
@@ -949,6 +950,19 @@ def _wrap(obj):
     while len(_WRAP_CACHE) > _WRAP_CACHE_MAX:
         _WRAP_CACHE.popitem(last=False)
     return w
+
+
+def evict_from_cache(obj) -> bool:
+    """Drop a retired object (typically the pre-flush ``PartitionedGraph``)
+    from the static-wrapper cache.
+
+    A delta flush (``partition.apply_edge_deltas``) returns a NEW partition
+    object — every trace keyed on the old wrapper baked the old packed words
+    in as constants, so the old entry can never serve the updated graph and
+    only pins dead label/coverage constants (and the retired arrays
+    themselves) until 128 newer entries push it out. The serving loop calls
+    this on every flush. Returns True if an entry was evicted."""
+    return _WRAP_CACHE.pop(id(obj), None) is not None
 
 
 def run(

@@ -70,67 +70,142 @@ def serve_din(arch, mode: str):
         print(f"pointwise: batch 512 in {dt * 1e3:.2f} ms ({512 / dt:.0f} QPS)")
 
 
+def _serve_events(workload, deltas):
+    """Interleave a mixed query workload with delta-ingest batches: each
+    insertion batch (followed by an explicit flush) lands at an even split
+    point of the query stream — the 'graph mutates mid-stream' scenario."""
+    from repro.serve import Query
+
+    n = len(workload)
+    cuts = {
+        max(1, (i + 1) * n // (len(deltas) + 1)): d for i, d in enumerate(deltas)
+    }
+    events = []
+    for i, q in enumerate(workload):
+        if i in cuts:
+            events.append(("delta", cuts[i]))
+            events.append(("flush", None))
+        events.append(
+            ("query", Query(kind=q["kind"], root=q["root"], target=q["target"], qid=i))
+        )
+    return events
+
+
 def serve_graph(
-    problem_kind: str,
     lanes: int,
     queries: int,
     scale: int,
     degree: int,
     seed: int,
+    smoke: bool = False,
+    delta_edges: int = 96,
 ):
-    """Always-on graph query serving, first slice (ROADMAP): hold ONE
-    partitioned graph device-resident, admission-batch incoming BFS/SSSP
-    roots into K lanes, and answer each batch with a single lane-batched
-    engine run — one compressed edge-stream pass per batch instead of one
-    per query (docs/tile_layout.md §8).
+    """Always-on graph serving on the repro.serve subsystem (ROADMAP item,
+    docs/serving.md): ONE resident partitioned graph answers a mixed
+    neighbors-of / distance-to (BFS+SSSP lanes) / ppr / recommend-for query
+    stream through the bounded-admission request loop, while streamed edge
+    insertions are delta-ingested mid-stream — flushes re-tile only the
+    dirty (core, phase) buckets and swap the resident partition between
+    batches.
 
-    The jit cache is kept warm at one batch width: a multi-query problem's
-    trace depends only on K, so a template problem is the static jit key and
-    each batch's roots enter through the label init (``engine.run(labels=)``).
-    Reports per-query latency and QPS; batch 0 separately (it pays the
-    compile)."""
+    ``smoke`` (CI, scripts/check.sh): after the run, re-answer every query
+    on BOTH the final resident partition (incrementally re-tiled) and a
+    from-scratch repartition of the final graph, and assert the answers are
+    bit-for-bit identical; also assert full BFS/WCC/SSSP label equality and
+    that every flush re-tiled a strict subset of buckets it reports."""
     import repro.core.graph as G
-    from repro.core.engine import EngineOptions, prepare_labels, run
     from repro.core.partition import PartitionConfig, partition_2d
-    from repro.core.problems import bfs_multi, sssp_multi
-    from repro.data.synthetic import admission_batches, query_workload
-
-    g = G.symmetrize(G.rmat(scale, degree, seed=1))
-    if problem_kind == "sssp":
-        w = (np.random.default_rng(2).random(g.src.shape[0]) + 0.1).astype(
-            np.float32
-        )
-        g = G.COOGraph(src=g.src, dst=g.dst, num_vertices=g.num_vertices, weights=w)
-    make = bfs_multi if problem_kind == "bfs" else sssp_multi
-    pg = partition_2d(g, PartitionConfig(p=4, l=2))  # device-resident, reused
-    opts = EngineOptions(lanes=lanes)  # admission check: K must match
-    roots = query_workload(queries, g.num_vertices, seed=seed)
-    batches = admission_batches(roots, lanes)
-    template = make(batches[0][0])
-
-    stats = []
-    for i, (chunk, served) in enumerate(batches):
-        labels = prepare_labels(make(chunk), g, pg)
-        t0 = time.perf_counter()
-        res = run(template, g, pg, opts, labels=labels)
-        dt = time.perf_counter() - t0
-        stats.append((served, dt, res.iterations))
-        print(
-            f"batch {i}: {served} queries in {dt * 1e3:.1f} ms "
-            f"({dt * 1e3 / served:.2f} ms/query, {res.iterations} iters, "
-            f"1 edge-stream pass/iter for all {served})"
-            + ("  [includes compile]" if i == 0 else "")
-        )
-    warm = stats[1:] or stats
-    served = sum(s for s, _, _ in warm)
-    wall = sum(t for _, t, _ in warm)
-    passes = sum(it for _, _, it in warm)
-    print(
-        f"steady state: {served} queries / {wall:.3f} s = {served / wall:.1f} QPS; "
-        f"amortized {g.src.shape[0] * served / wall / 1e6:.2f} MTEPS/query-pass; "
-        f"{passes} batched edge-stream passes vs ~{passes * lanes} sequential"
+    from repro.data.synthetic import edge_insertion_stream, mixed_query_workload
+    from repro.serve import (
+        GraphService, LoopConfig, RecommendScorer, RequestLoop,
     )
-    return stats
+
+    g0 = G.symmetrize(G.rmat(scale, degree, seed=1))
+    w = (np.random.default_rng(2).random(g0.num_edges) + 0.1).astype(np.float32)
+    g = G.COOGraph(src=g0.src, dst=g0.dst, num_vertices=g0.num_vertices, weights=w)
+    cfg = PartitionConfig(p=4, l=2)
+    scorer = RecommendScorer(pool_size=64, topk=8)
+    service = GraphService(g, cfg, lanes=lanes, scorer=scorer)
+    loop = RequestLoop(service, LoopConfig(max_wait_ms=20.0, host_batch=lanes))
+
+    workload = mixed_query_workload(queries, g.num_vertices, seed=seed)
+    deltas = edge_insertion_stream(
+        delta_edges, g.num_vertices, num_batches=2, weighted=True, seed=seed + 1
+    )
+    events = _serve_events(workload, deltas)
+    completions = loop.run(events)
+    s = loop.metrics.summary()
+
+    lat = s["latency"]
+    print(
+        f"served {s['queries']} queries ({s['rejected']} rejected) in "
+        f"{s['wall_s']:.2f}s = {s['qps']:.1f} QPS; latency p50 "
+        f"{lat['p50_ms']:.1f} / p95 {lat['p95_ms']:.1f} / p99 "
+        f"{lat['p99_ms']:.1f} ms"
+    )
+    print(
+        f"{s['batches']} batches ({s['cold_batches']} cold), steady batch "
+        f"{s['steady_batch_ms']:.2f} ms"
+        + (
+            f", amortized {s['amortized_mteps']:.2f} MTEPS"
+            if s["amortized_mteps"] else ""
+        )
+    )
+    for f in s["flushes"]:
+        print(
+            f"flush: +{f['edges_added']} edges re-tiled "
+            f"{f['buckets_retiled']}/{f['total_buckets']} buckets "
+            f"({100 * f['repacked_fraction']:.0f}% of packed bytes) in "
+            f"{f['wall_s'] * 1e3:.1f} ms"
+        )
+    if not smoke:
+        return s
+
+    # -- smoke equivalence: resident (incrementally re-tiled) partition vs a
+    # from-scratch repartition of the final graph, bit for bit
+    assert len(completions) == len(workload), (len(completions), len(workload))
+    assert s["flushes"], "smoke must exercise delta ingest"
+    for f in s["flushes"]:
+        assert f["buckets_retiled"] <= f["total_buckets"]
+        assert f["repacked_fraction"] <= 1.0
+    g_final, pg_res = service.g, service.pg
+    assert g_final.num_edges == g.num_edges + delta_edges
+    pg_cold = partition_2d(g_final, cfg)
+
+    def replay(pg):
+        svc = GraphService(
+            g_final, pg, lanes=lanes,
+            scorer=RecommendScorer(pool_size=64, topk=8),
+        )
+        lp = RequestLoop(service=svc, cfg=LoopConfig(max_wait_ms=20.0, host_batch=lanes))
+        return lp.run(_serve_events(workload, []))
+
+    res_a, res_b = replay(pg_res), replay(pg_cold)
+    assert len(res_a) == len(res_b) == len(workload)
+    for ca, cb in zip(res_a, res_b):
+        assert ca.qid == cb.qid and ca.kind == cb.kind
+        a, b = ca.answer, cb.answer
+        for k in a:
+            assert np.array_equal(np.asarray(a[k]), np.asarray(b[k])), (
+                ca.kind, ca.qid, k, a[k], b[k]
+            )
+    # full-label equality on the resident partition (incl. WCC, which the
+    # router does not serve): the delta-ingest acceptance criterion
+    from repro.core.engine import EngineOptions as EO, run as erun
+    from repro.core.problems import bfs, sssp, wcc
+
+    for prob in (bfs(0), wcc(), sssp(0)):
+        ra = erun(prob, g_final, pg_res, EO())
+        rb = erun(prob, g_final, pg_cold, EO())
+        assert ra.iterations == rb.iterations, prob.name
+        for k in ra.labels:
+            assert np.array_equal(ra.labels[k], rb.labels[k]), (prob.name, k)
+    print(
+        "serve smoke OK: resident delta-retiled partition matches "
+        "from-scratch repartition bit-for-bit "
+        f"({len(workload)} answers + BFS/WCC/SSSP labels)"
+    )
+    return s
 
 
 def main():
@@ -142,17 +217,29 @@ def main():
     ap.add_argument("--tokens", type=int, default=32)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--mode", default="pointwise", choices=["pointwise", "retrieval"])
-    ap.add_argument("--graph-problem", default="bfs", choices=["bfs", "sssp"])
     ap.add_argument("--lanes", type=int, default=16, help="admission batch width K")
     ap.add_argument("--queries", type=int, default=64)
     ap.add_argument("--scale", type=int, default=9, help="rmat scale (graph mode)")
     ap.add_argument("--degree", type=int, default=8)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--delta-edges", type=int, default=96,
+                    help="edge insertions streamed mid-run (graph mode)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="bounded CI run: assert delta-retiled answers match "
+                         "a from-scratch repartition bit-for-bit")
     args = ap.parse_args()
     if args.arch == "graph":
+        if args.smoke:
+            # bounded: small graph, few queries, still covers all kinds +
+            # two mid-stream delta flushes
+            serve_graph(
+                lanes=8, queries=40, scale=8, degree=6, seed=args.seed,
+                smoke=True, delta_edges=64,
+            )
+            return
         serve_graph(
-            args.graph_problem, args.lanes, args.queries, args.scale,
-            args.degree, args.seed,
+            args.lanes, args.queries, args.scale, args.degree, args.seed,
+            delta_edges=args.delta_edges,
         )
         return
     arch = get(args.arch)

@@ -98,6 +98,7 @@ def score_candidates(
     batch: Dict[str, jnp.ndarray],
     cfg: DINConfig,
     chunk: int | None = None,
+    lookup_fn=None,
 ) -> jnp.ndarray:
     """Retrieval scoring: ONE user vs n_candidates items. batch:
     hist_items/hist_cates (1, L), profile_bag (1, P), cand_items/cand_cates
@@ -105,17 +106,20 @@ def score_candidates(
 
     ``chunk=None`` scores all candidates in one vectorized pass (the sharded
     production path: candidates sharded over the mesh); an integer chunk uses
-    lax.map for memory-bounded single-host runs.
+    lax.map for memory-bounded single-host runs. ``lookup_fn`` routes BOTH
+    the history and candidate item-table reads through the GraphScale
+    crossbar exchange (see ``_embed_elem``) — the serving router's
+    recommend-for path passes ``dist.embedding.make_crossbar_lookup``.
     """
     c = batch["cand_items"].shape[0]
-    hist = _embed_elem(params, batch["hist_items"], batch["hist_cates"])  # (1, L, e)
+    hist = _embed_elem(params, batch["hist_items"], batch["hist_cates"], lookup_fn)  # (1, L, e)
     hist_mask = batch["hist_items"] >= 0
     hist = jnp.where(hist_mask[..., None], hist, 0.0)
     prof = embedding_bag_reference(params["cate_table"], batch["profile_bag"], mode="sum")
 
     def score_block(items, cates):
         n = items.shape[0]
-        target = _embed_elem(params, items, cates)  # (n, e)
+        target = _embed_elem(params, items, cates, lookup_fn)  # (n, e)
         h = jnp.broadcast_to(hist, (n,) + hist.shape[1:])
         m = jnp.broadcast_to(hist_mask, (n,) + hist_mask.shape[1:])
         user = _attention_pool(params, h, target, m)  # (n, e)

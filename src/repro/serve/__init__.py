@@ -1,0 +1,47 @@
+"""repro.serve — the always-on graph service (docs/serving.md).
+
+One resident ``PartitionedGraph`` stays hot while mixed-op queries stream in
+and the graph itself mutates:
+
+  loop.RequestLoop      bounded admission + same-kind K-lane coalescing,
+                        deadline-or-full draining, per-query latency
+  delta.DeltaBuffer     streamed edge insertions binned to (core, phase)
+                        buckets; flush re-tiles ONLY dirty row blocks
+                        (core.partition.apply_edge_deltas)
+  router.GraphService   neighbors-of / distance-to / recommend-for routing
+                        over the same resident partition
+  metrics               p50/p95/p99 latency, QPS, amortized MTEPS
+"""
+from repro.serve.delta import DeltaBuffer
+from repro.serve.loop import Completion, LoopConfig, RequestLoop
+from repro.serve.metrics import (
+    BatchRecord,
+    FlushRecord,
+    ServingMetrics,
+    latency_summary,
+)
+from repro.serve.router import (
+    KINDS,
+    TRAVERSAL_KINDS,
+    BatchResult,
+    GraphService,
+    Query,
+    RecommendScorer,
+)
+
+__all__ = [
+    "BatchRecord",
+    "BatchResult",
+    "Completion",
+    "DeltaBuffer",
+    "FlushRecord",
+    "GraphService",
+    "KINDS",
+    "LoopConfig",
+    "Query",
+    "RecommendScorer",
+    "RequestLoop",
+    "ServingMetrics",
+    "TRAVERSAL_KINDS",
+    "latency_summary",
+]

@@ -1,0 +1,324 @@
+"""Mixed-op routing over ONE resident ``PartitionedGraph``.
+
+Three traffic classes share the same resident partition (ISSUE 9 / ROADMAP
+"always-on graph serving"):
+
+  neighbors-of   host-side decode of the flat bucket layout
+                 (``PartitionedGraph.in_neighbors`` — no engine run)
+  distance-to    BFS / SSSP lane batches: K same-kind queries answered by one
+                 warm-jit engine run (PR 7 template-problem trick — the trace
+                 depends only on K; each batch's roots enter via the label
+                 init), then ``dist[target, lane]`` is extracted per query.
+                 PPR rides the same path, answering top-k vertices per seed.
+  recommend-for  DIN retrieval scoring over a candidate pool of hub vertices,
+                 with the user's history read from the SAME partition
+                 (in-neighbors) and the item-table reads routed through the
+                 ``dist.embedding`` crossbar exchange.
+
+``GraphService`` owns the resident state: the COO view, the partition, the
+per-kind warm-jit templates, the recommend scorer, and the delta buffer.
+Ingest + flush swap in a NEW partition (``apply_edge_deltas``), bump the
+generation (so the next batch per kind is marked cold — it retraces against
+the new edge constants), and evict the retired partition from the engine's
+identity-keyed jit cache.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import jax
+import numpy as np
+
+from repro.core.engine import EngineOptions, evict_from_cache, prepare_labels, run
+from repro.core.graph import COOGraph, in_degrees
+from repro.core.partition import PartitionConfig, PartitionedGraph, partition_2d
+from repro.core.problems import INF_U32, bfs_multi, ppr_multi, sssp_multi
+from repro.serve.delta import DeltaBuffer
+from repro.serve.metrics import FlushRecord
+
+__all__ = ["Query", "BatchResult", "RecommendScorer", "GraphService",
+           "TRAVERSAL_KINDS", "KINDS"]
+
+TRAVERSAL_KINDS = ("bfs", "sssp", "ppr")
+KINDS = ("neighbors",) + TRAVERSAL_KINDS + ("recommend",)
+
+
+@dataclasses.dataclass(frozen=True)
+class Query:
+    """One request. ``target`` is the distance-to endpoint (bfs/sssp only);
+    ``qid`` is the caller's correlation id."""
+
+    kind: str
+    root: int
+    target: int = 0
+    qid: int = -1
+
+
+@dataclasses.dataclass
+class BatchResult:
+    """One executed same-kind batch: ``answers[i]`` answers ``queries[i]``."""
+
+    kind: str
+    answers: list
+    served: int
+    lanes: int
+    wall_s: float
+    iterations: int
+    cold: bool
+
+
+class RecommendScorer:
+    """recommend-for: DIN retrieval scoring over a fixed-size candidate pool.
+
+    The pool is the ``pool_size`` highest in-degree vertices of the resident
+    graph (recomputed on every flush — newly hot vertices enter the pool),
+    mapped onto the DIN item/category vocab by id. The user's behavior
+    history is their in-neighbor list decoded from the resident partition —
+    the same array the neighbors-of path serves — so recommendations follow
+    the graph through delta ingest. Shapes are static (pool size, seq_len),
+    so the jitted scorer stays warm across queries AND flushes.
+
+    ``lookup='crossbar'`` routes item-table reads through the GraphScale
+    crossbar exchange (``dist.embedding.make_crossbar_lookup``) on a graph
+    mesh over the local devices; ``'take'`` is the plain XLA gather.
+    """
+
+    def __init__(
+        self,
+        cfg=None,
+        *,
+        pool_size: int = 64,
+        topk: int = 8,
+        lookup: str = "crossbar",
+        seed: int = 0,
+    ):
+        from repro.configs.registry import get
+        from repro.models.recsys import din
+
+        self.cfg = cfg if cfg is not None else get("din").smoke()
+        self.pool_size = int(pool_size)
+        self.topk = int(topk)
+        self._params = din.init(jax.random.key(seed), self.cfg)
+        lookup_fn = None
+        if lookup == "crossbar":
+            from repro.dist.embedding import make_crossbar_lookup
+            from repro.launch.mesh import make_graph_mesh
+
+            # one table shard per local device (1 on CPU CI — the exchange
+            # still runs, degenerating to a local gather + all_to_all of 1)
+            n_dev = len(jax.devices())
+            shards = n_dev if self.cfg.item_vocab % n_dev == 0 else 1
+            mesh = make_graph_mesh(shards, axis="table")
+            lookup_fn = make_crossbar_lookup(mesh, "table", "table")
+        elif lookup != "take":
+            raise ValueError(f"lookup must be 'crossbar' or 'take', got {lookup!r}")
+        self._score = jax.jit(
+            lambda params, batch: din.score_candidates(
+                params, batch, self.cfg, lookup_fn=lookup_fn
+            )
+        )
+        self._pool_items = None
+        self._pool_vertices = None
+
+    def refresh_pool(self, g: COOGraph):
+        """(Re)build the candidate pool from the current graph's in-degrees.
+        Called at service construction and after every flush."""
+        deg = in_degrees(g)
+        order = np.argsort(-deg, kind="stable")[: self.pool_size]
+        if order.shape[0] < self.pool_size:  # tiny graph: pad by repetition
+            order = np.resize(order, self.pool_size)
+        self._pool_vertices = order.astype(np.int64)
+        self._pool_items = (order % self.cfg.item_vocab).astype(np.int32)
+
+    def recommend_for(self, pg: PartitionedGraph, root: int) -> dict:
+        """Score the pool for one user (= vertex ``root``); returns the topk
+        pool vertices with their DIN scores."""
+        if self._pool_items is None:
+            raise RuntimeError("refresh_pool was never called")
+        cfg = self.cfg
+        L = cfg.seq_len
+        hist_v = pg.in_neighbors(root)[:L]
+        hist_items = np.full((1, L), -1, dtype=np.int32)
+        hist_items[0, : hist_v.shape[0]] = hist_v % cfg.item_vocab
+        hist_cates = np.where(hist_items >= 0, hist_items % cfg.cate_vocab, -1)
+        # deterministic per-user profile bag (stand-in for profile features)
+        prof = (
+            (int(root) + np.arange(cfg.profile_bag_len)) % cfg.cate_vocab
+        ).astype(np.int32)[None, :]
+        batch = {
+            "hist_items": hist_items,
+            "hist_cates": hist_cates.astype(np.int32),
+            "profile_bag": prof,
+            "cand_items": self._pool_items,
+            "cand_cates": (self._pool_items % cfg.cate_vocab).astype(np.int32),
+        }
+        scores = np.asarray(self._score(self._params, batch))
+        top = np.argsort(-scores, kind="stable")[: self.topk]
+        return {
+            "vertices": self._pool_vertices[top].copy(),
+            "items": self._pool_items[top].copy(),
+            "scores": scores[top].copy(),
+        }
+
+
+class GraphService:
+    """The always-on resident graph service: answers all KINDS from one
+    ``PartitionedGraph``, accepts streamed edge insertions, and re-tiles
+    dirty buckets on flush."""
+
+    def __init__(
+        self,
+        g: COOGraph,
+        partition,  # PartitionConfig (partitions here) or a built PartitionedGraph
+        *,
+        lanes: int = 16,
+        opts: Optional[EngineOptions] = None,
+        scorer: Optional[RecommendScorer] = None,
+        ppr_tol: float = 1e-4,
+        ppr_topk: int = 8,
+        auto_flush_edges: Optional[int] = None,
+    ):
+        if isinstance(partition, PartitionConfig):
+            pg = partition_2d(g, partition)
+        elif isinstance(partition, PartitionedGraph):
+            pg = partition
+        else:
+            raise TypeError(f"partition must be PartitionConfig or PartitionedGraph, got {type(partition)}")
+        self.g = g
+        self.pg = pg
+        self.lanes = int(lanes)
+        self.opts = opts if opts is not None else EngineOptions(lanes=lanes)
+        if self.opts.lanes != self.lanes:
+            raise ValueError(
+                f"opts.lanes={self.opts.lanes} must match service lanes={lanes}"
+            )
+        self.ppr_tol = ppr_tol
+        self.ppr_topk = ppr_topk
+        self.generation = 0
+        self.delta = DeltaBuffer(pg, auto_flush_edges=auto_flush_edges)
+        self.scorer = scorer
+        if self.scorer is not None:
+            self.scorer.refresh_pool(g)
+        # warm-jit template problems, one per traversal kind: the engine
+        # trace depends only on K, so any K-rooted instance is the jit key
+        zeros = [0] * self.lanes
+        self._templates = {
+            "bfs": bfs_multi(zeros),
+            "sssp": sssp_multi(zeros),
+            "ppr": ppr_multi(zeros, tol=ppr_tol),
+        }
+        self._makers = {
+            "bfs": bfs_multi,
+            "sssp": sssp_multi,
+            "ppr": lambda roots: ppr_multi(roots, tol=ppr_tol),
+        }
+        self._warm: set = set()  # (kind, generation) pairs that already compiled
+
+    # -- delta ingest ------------------------------------------------------
+    def ingest(self, src, dst, weights=None) -> int:
+        """Stage streamed edge insertions; visible to queries after flush()."""
+        return self.delta.stage(src, dst, weights)
+
+    def flush(self) -> FlushRecord:
+        """Re-tile the dirty buckets, swap in the new partition, sync the COO
+        view, refresh the recommend pool, and invalidate the retired
+        partition's jit-cache entry (its traces baked the old edge stream,
+        labels, and coverage words in as constants)."""
+        src, dst, w = self.delta.pending()
+        t0 = time.perf_counter()
+        new_pg, report = self.delta.flush(self.pg)
+        wall = time.perf_counter() - t0
+        if report.edges_added:
+            old_pg = self.pg
+            self.pg = new_pg
+            self.g = COOGraph(
+                src=np.concatenate([self.g.src, src.astype(self.g.src.dtype)]),
+                dst=np.concatenate([self.g.dst, dst.astype(self.g.dst.dtype)]),
+                num_vertices=self.g.num_vertices,
+                weights=(
+                    np.concatenate([self.g.weights, w])
+                    if self.g.weights is not None else None
+                ),
+            )
+            self.generation += 1  # next batch per kind re-traces (cold)
+            evict_from_cache(old_pg)
+            if self.scorer is not None:
+                self.scorer.refresh_pool(self.g)
+        return FlushRecord(
+            edges_added=report.edges_added,
+            wall_s=wall,
+            buckets_retiled=report.buckets_retiled,
+            total_buckets=report.total_buckets,
+            repacked_fraction=report.repacked_fraction,
+        )
+
+    # -- query answering ---------------------------------------------------
+    def answer_batch(self, queries: list) -> BatchResult:
+        """Answer one SAME-KIND batch of up to ``lanes`` queries (the request
+        loop's admission coalescing guarantees both)."""
+        if not queries:
+            raise ValueError("empty batch")
+        kind = queries[0].kind
+        if any(q.kind != kind for q in queries):
+            raise ValueError("mixed-kind batch; admission must coalesce by kind")
+        if kind not in KINDS:
+            raise ValueError(f"unknown kind {kind!r}; supported: {KINDS}")
+        if kind in TRAVERSAL_KINDS and len(queries) > self.lanes:
+            raise ValueError(f"batch of {len(queries)} exceeds K={self.lanes}")
+        t0 = time.perf_counter()
+        if kind == "neighbors":
+            answers = [self.pg.in_neighbors(q.root) for q in queries]
+            iters, lanes_used, cold = 0, 1, False
+        elif kind == "recommend":
+            if self.scorer is None:
+                raise ValueError("service built without a RecommendScorer")
+            key = ("recommend", self.generation)
+            cold = key not in self._warm
+            self._warm.add(key)
+            answers = [self.scorer.recommend_for(self.pg, q.root) for q in queries]
+            iters, lanes_used = 0, 1
+        else:
+            answers, iters, cold = self._answer_traversal(kind, queries)
+            lanes_used = self.lanes
+        wall = time.perf_counter() - t0
+        return BatchResult(
+            kind=kind, answers=answers, served=len(queries),
+            lanes=lanes_used, wall_s=wall, iterations=iters, cold=cold,
+        )
+
+    def _answer_traversal(self, kind: str, queries: list):
+        roots = np.asarray([q.root for q in queries], dtype=np.int64)
+        served = roots.shape[0]
+        if served < self.lanes:  # pad the partial batch (admission_batches rule)
+            roots = np.concatenate([roots, np.repeat(roots[-1:], self.lanes - served)])
+        labels = prepare_labels(self._makers[kind](roots), self.g, self.pg)
+        key = (kind, self.generation)
+        cold = key not in self._warm
+        self._warm.add(key)
+        res = run(self._templates[kind], self.g, self.pg, self.opts, labels=labels)
+        if kind == "bfs":
+            dist = res.labels["dist"]  # (V, K) uint32, INF_U32 = unreachable
+            answers = [
+                {"distance": int(dist[q.target, j]),
+                 "reachable": bool(dist[q.target, j] != INF_U32)}
+                for j, q in enumerate(queries)
+            ]
+        elif kind == "sssp":
+            lab = res.labels["label"]  # (V, K) float32, +inf = unreachable
+            answers = [
+                {"distance": float(lab[q.target, j]),
+                 "reachable": bool(np.isfinite(lab[q.target, j]))}
+                for j, q in enumerate(queries)
+            ]
+        else:  # ppr: top-k vertices per seed lane
+            lab = res.labels["label"]  # (V, K) float32 rank columns
+            answers = []
+            for j in range(served):
+                top = np.argsort(-lab[:, j], kind="stable")[: self.ppr_topk]
+                answers.append({
+                    "vertices": top.astype(np.int64),
+                    "scores": lab[top, j].copy(),
+                })
+        return answers, res.iterations, cold

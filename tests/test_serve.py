@@ -1,0 +1,299 @@
+"""The always-on graph service (ISSUE 9, docs/serving.md): admission
+batching, workload generators, the mixed-op router, the request loop, and
+the resident-partition swap protocol (jit-cache eviction on flush).
+
+Router answers are checked against INDEPENDENT oracles — single-query engine
+runs for bfs/sssp, a direct lane-batched run through the problems API for
+ppr, and the raw COO edge list for neighbors — not against the router's own
+machinery.
+"""
+import numpy as np
+import pytest
+
+import repro.core.graph as G
+from repro.core.engine import EngineOptions, evict_from_cache, prepare_labels, run
+from repro.core.partition import PartitionConfig, partition_2d
+from repro.core.problems import INF_U32, bfs, ppr_multi, sssp
+from repro.data.synthetic import (
+    DEFAULT_QUERY_MIX,
+    QUERY_KINDS,
+    admission_batches,
+    edge_insertion_stream,
+    mixed_query_workload,
+)
+from repro.serve import (
+    GraphService,
+    LoopConfig,
+    Query,
+    RecommendScorer,
+    RequestLoop,
+    latency_summary,
+)
+
+LANES = 4
+
+
+@pytest.fixture(scope="module")
+def graph():
+    g0 = G.symmetrize(G.rmat(6, 4, seed=1))
+    w = (np.random.default_rng(2).random(g0.num_edges) + 0.1).astype(np.float32)
+    return G.COOGraph(src=g0.src, dst=g0.dst, num_vertices=g0.num_vertices, weights=w)
+
+
+@pytest.fixture(scope="module")
+def service(graph):
+    return GraphService(
+        graph, PartitionConfig(p=2, l=2), lanes=LANES,
+        scorer=RecommendScorer(pool_size=16, topk=4),
+    )
+
+
+# ---------------------------------------------------------------------------
+# admission batching + workload generators
+
+
+def test_admission_batches_partial_padding():
+    roots = np.arange(10)
+    batches = admission_batches(roots, 4)
+    assert [served for _, served in batches] == [4, 4, 2]
+    assert all(chunk.shape == (4,) for chunk, _ in batches)
+    # the partial batch is padded by repeating its LAST root
+    assert batches[-1][0].tolist() == [8, 9, 9, 9]
+
+
+def test_admission_batches_edge_cases():
+    assert admission_batches(np.array([], dtype=np.int64), 4) == []
+    with pytest.raises(ValueError):
+        admission_batches(np.arange(3), 0)
+    # K = 1: every query is its own batch, nothing padded
+    batches = admission_batches(np.array([5, 5, 7]), 1)
+    assert [c.tolist() for c, _ in batches] == [[5], [5], [7]]
+    # duplicate roots inside one batch survive (duplicate lanes are cheap)
+    (chunk, served), = admission_batches(np.array([3, 3, 3, 3]), 4)
+    assert chunk.tolist() == [3, 3, 3, 3] and served == 4
+
+
+def test_mixed_query_workload_contract():
+    wl = mixed_query_workload(64, 128, seed=5)
+    assert wl == mixed_query_workload(64, 128, seed=5)  # deterministic
+    assert len(wl) == 64
+    for q in wl:
+        assert q["kind"] in DEFAULT_QUERY_MIX
+        assert 0 <= q["root"] < 128 and 0 <= q["target"] < 128
+    # all requested kinds actually show up at this size
+    assert {q["kind"] for q in wl} == set(DEFAULT_QUERY_MIX)
+    only = mixed_query_workload(8, 128, mix={"bfs": 1.0}, seed=5)
+    assert {q["kind"] for q in only} == {"bfs"}
+
+
+def test_mixed_query_workload_validation():
+    with pytest.raises(ValueError):
+        mixed_query_workload(4, 16, mix={"not-a-kind": 1.0})
+    with pytest.raises(ValueError):
+        mixed_query_workload(4, 16, mix={"bfs": 0.0})
+    assert set(QUERY_KINDS) >= set(DEFAULT_QUERY_MIX)
+
+
+def test_edge_insertion_stream_contract():
+    batches = edge_insertion_stream(30, 64, num_batches=4, weighted=True, seed=6)
+    assert len(batches) == 4
+    assert sum(s.shape[0] for s, _, _ in batches) == 30
+    for s, d, w in batches:
+        assert s.shape == d.shape == w.shape and w.dtype == np.float32
+        assert s.min() >= 0 and max(s.max(), d.max()) < 64
+    s, d, w = edge_insertion_stream(10, 64, seed=7)[0]
+    assert w is None and s.shape == (10,)
+
+
+def test_latency_summary_empty():
+    s = latency_summary([])
+    assert s["n"] == 0 and s["p50_ms"] is None and s["p99_ms"] is None
+
+
+# ---------------------------------------------------------------------------
+# router answers vs independent oracles
+
+
+def test_bfs_batch_matches_single_query_oracle(graph, service):
+    roots = [0, 7, 19, 33]
+    qs = [Query(kind="bfs", root=r, target=5, qid=i) for i, r in enumerate(roots)]
+    res = service.answer_batch(qs)
+    assert res.served == 4 and res.kind == "bfs"
+    pg = partition_2d(graph, PartitionConfig(p=2, l=2))
+    for q, ans in zip(qs, res.answers):
+        lab = run(bfs(q.root), graph, pg, EngineOptions()).labels["label"]
+        want = int(lab[q.target])
+        assert ans["reachable"] == (want != int(INF_U32))
+        assert ans["distance"] == want
+
+
+def test_sssp_batch_matches_single_query_oracle(graph, service):
+    qs = [Query(kind="sssp", root=r, target=9, qid=i) for i, r in enumerate([2, 11])]
+    res = service.answer_batch(qs)
+    assert res.served == 2  # partial batch: padded to K internally
+    pg = partition_2d(graph, PartitionConfig(p=2, l=2))
+    for q, ans in zip(qs, res.answers):
+        lab = run(sssp(q.root), graph, pg, EngineOptions()).labels["label"]
+        assert ans["distance"] == float(lab[q.target])
+        assert ans["reachable"] == bool(np.isfinite(lab[q.target]))
+
+
+def test_ppr_batch_matches_direct_lane_run(graph, service):
+    root = 3
+    qs = [Query(kind="ppr", root=root, qid=0)]
+    ans = service.answer_batch(qs).answers[0]
+    # oracle: the identical lane batch built directly through the problems
+    # API (the router pads a partial batch by repeating the last root)
+    prob = ppr_multi([root] * LANES, tol=service.ppr_tol)
+    labels = prepare_labels(prob, graph, service.pg)
+    res = run(prob, graph, service.pg, service.opts, labels=labels)
+    lab = np.asarray(res.labels["label"])
+    top = np.argsort(-lab[:, 0], kind="stable")[: service.ppr_topk]
+    assert np.array_equal(ans["vertices"], top)
+    assert np.array_equal(ans["scores"], lab[top, 0])
+
+
+def test_neighbors_matches_coo(graph, service):
+    qs = [Query(kind="neighbors", root=v, qid=i) for i, v in enumerate([0, 13, 40])]
+    res = service.answer_batch(qs)
+    assert res.iterations == 0
+    for q, ans in zip(qs, res.answers):
+        want = np.sort(graph.src[graph.dst == q.root])
+        assert np.array_equal(np.sort(ans), want.astype(ans.dtype))
+
+
+def test_recommend_shapes_and_determinism(graph, service):
+    a1 = service.answer_batch([Query(kind="recommend", root=8, qid=0)]).answers[0]
+    a2 = service.answer_batch([Query(kind="recommend", root=8, qid=1)]).answers[0]
+    assert a1["vertices"].shape == (4,) and a1["scores"].shape == (4,)
+    assert np.array_equal(a1["vertices"], a2["vertices"])
+    assert np.array_equal(a1["scores"], a2["scores"])
+    # candidates come from the scorer's hub pool
+    assert set(a1["vertices"].tolist()) <= set(
+        service.scorer._pool_vertices.tolist()
+    )
+
+
+def test_batch_validation(service):
+    with pytest.raises(ValueError):
+        service.answer_batch([])
+    with pytest.raises(ValueError):
+        service.answer_batch([Query(kind="bfs", root=0), Query(kind="sssp", root=0)])
+    with pytest.raises(ValueError):
+        service.answer_batch([Query(kind="pagerank", root=0)])
+    with pytest.raises(ValueError):
+        service.answer_batch([Query(kind="bfs", root=0)] * (LANES + 1))
+
+
+# ---------------------------------------------------------------------------
+# request loop
+
+
+def test_loop_capacity_rejection(graph):
+    svc = GraphService(graph, PartitionConfig(p=2, l=2), lanes=LANES)
+    loop = RequestLoop(svc, LoopConfig(queue_capacity=2, max_wait_ms=1e6))
+    assert loop.submit(Query(kind="bfs", root=0, qid=0), now=0.0)
+    assert loop.submit(Query(kind="bfs", root=1, qid=1), now=0.0)
+    assert not loop.submit(Query(kind="bfs", root=2, qid=2), now=0.0)
+    assert loop.queued == 2 and loop.metrics.rejected == 1
+
+
+def test_loop_coalesces_full_batch(graph):
+    svc = GraphService(graph, PartitionConfig(p=2, l=2), lanes=LANES)
+    loop = RequestLoop(svc, LoopConfig(max_wait_ms=1e6))
+    for i in range(LANES):
+        assert loop.submit(Query(kind="bfs", root=i, qid=i), now=0.0)
+    done = loop.pump(now=0.0)  # full-width batch drains with no deadline
+    assert [c.qid for c in done] == list(range(LANES))
+    assert len(loop.metrics.batches) == 1
+    b = loop.metrics.batches[0]
+    assert b.served == LANES and b.kind == "bfs"
+    assert all(c.latency_ms >= 0.0 for c in done)
+
+
+def test_loop_deadline_drains_partial_batch(graph):
+    svc = GraphService(graph, PartitionConfig(p=2, l=2), lanes=LANES)
+    loop = RequestLoop(svc, LoopConfig(max_wait_ms=20.0))
+    assert loop.submit(Query(kind="sssp", root=1, qid=7), now=0.0)
+    assert loop.pump(now=0.010) == []  # young partial batch keeps waiting
+    done = loop.pump(now=0.025)  # past the 20 ms deadline
+    assert [c.qid for c in done] == [7]
+    assert loop.metrics.batches[-1].served == 1
+
+
+def test_loop_run_replays_mixed_stream(graph):
+    svc = GraphService(
+        graph, PartitionConfig(p=2, l=2), lanes=LANES,
+        scorer=RecommendScorer(pool_size=16, topk=4),
+    )
+    loop = RequestLoop(svc, LoopConfig(max_wait_ms=5.0, host_batch=LANES))
+    wl = mixed_query_workload(20, graph.num_vertices, seed=9)
+    events = [
+        ("query", Query(kind=q["kind"], root=q["root"], target=q["target"], qid=i))
+        for i, q in enumerate(wl)
+    ]
+    done = loop.run(events)
+    assert sorted(c.qid for c in done) == list(range(20))
+    s = loop.metrics.summary()
+    assert s["queries"] == 20 and s["latency"]["n"] == 20
+    assert s["qps"] > 0 and s["batches"] == len(loop.metrics.batches)
+    for kind in {q["kind"] for q in wl}:
+        assert s["per_kind"][kind]["latency"]["n"] == sum(
+            1 for q in wl if q["kind"] == kind
+        )
+
+
+# ---------------------------------------------------------------------------
+# flush protocol: swap, generation bump, jit-cache eviction
+
+
+def test_flush_mid_stream_matches_fresh_service(graph):
+    svc = GraphService(
+        graph, PartitionConfig(p=2, l=2), lanes=LANES,
+        scorer=RecommendScorer(pool_size=16, topk=4),
+    )
+    qs = [Query(kind="bfs", root=r, target=21, qid=i) for i, r in enumerate(range(4))]
+    first = svc.answer_batch(qs)
+    assert first.cold  # generation 0, first bfs batch traces
+    assert not svc.answer_batch(qs).cold  # warm now
+    old_pg = svc.pg
+    src, dst, w = edge_insertion_stream(24, graph.num_vertices, weighted=True, seed=3)[0]
+    svc.ingest(src, dst, w)
+    rec = svc.flush()
+    assert rec.edges_added == 24 and svc.generation == 1
+    assert svc.pg is not old_pg  # the resident partition was SWAPPED, not mutated
+    assert not evict_from_cache(old_pg)  # flush already evicted the retired entry
+    assert svc.g.num_edges == graph.num_edges + 24
+    post = svc.answer_batch(qs)
+    assert post.cold  # new generation: first batch per kind re-traces
+    # answers on the delta-retiled resident == a fresh service on the grown
+    # graph with a cold partition
+    g2 = G.COOGraph(
+        src=np.concatenate([graph.src, src.astype(graph.src.dtype)]),
+        dst=np.concatenate([graph.dst, dst.astype(graph.dst.dtype)]),
+        num_vertices=graph.num_vertices,
+        weights=np.concatenate([graph.weights, w]),
+    )
+    fresh = GraphService(g2, PartitionConfig(p=2, l=2), lanes=LANES)
+    for a, b in zip(post.answers, fresh.answer_batch(qs).answers):
+        assert a == b
+
+
+def test_auto_flush_threshold(graph):
+    svc = GraphService(
+        graph, PartitionConfig(p=2, l=2), lanes=LANES, auto_flush_edges=8,
+    )
+    loop = RequestLoop(svc)
+    loop.ingest([1, 2, 3], [4, 5, 6], [1.0, 1.0, 1.0])
+    assert svc.delta.pending_edges == 3  # below threshold: staged only
+    loop.ingest([7] * 5, [8] * 5, [1.0] * 5)
+    assert svc.delta.pending_edges == 0  # threshold crossed: auto-flushed
+    assert svc.generation == 1 and len(loop.metrics.flushes) == 1
+    assert svc.g.num_edges == graph.num_edges + 8
+
+
+def test_opts_lanes_mismatch_rejected(graph):
+    with pytest.raises(ValueError):
+        GraphService(
+            graph, PartitionConfig(p=2, l=2), lanes=4, opts=EngineOptions(lanes=8),
+        )
