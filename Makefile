@@ -4,7 +4,7 @@ export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 # unpinned probe of the absent TPU can hang multi-device collectives)
 export JAX_PLATFORMS ?= cpu
 
-.PHONY: test bench-smoke serve-smoke bench-engine bench check check-dist
+.PHONY: test bench-smoke serve-smoke bench-scale bench-engine bench check check-dist
 
 # tier-1 verify (ROADMAP.md)
 test:
@@ -30,6 +30,12 @@ serve-smoke:
 	$(PYTHON) -m repro.launch.serve --arch graph --smoke
 	$(PYTHON) -m benchmarks.bench_engine --serve-smoke
 
+# streaming-partitioner smoke (docs/scaling.md): scale-14 RMAT through
+# partition_2d_streaming in a cold child under an asserted RSS-delta ceiling,
+# bit-identical to the in-memory build, BFS labels agreeing across both
+bench-scale:
+	$(PYTHON) -m benchmarks.bench_engine --scale-smoke
+
 # full engine comparison incl. skew suite -> BENCH_engine.json
 bench-engine:
 	$(PYTHON) -m benchmarks.bench_engine
@@ -38,4 +44,4 @@ bench-engine:
 bench:
 	$(PYTHON) -m benchmarks.run
 
-check: test bench-smoke serve-smoke check-dist
+check: test bench-smoke serve-smoke bench-scale check-dist

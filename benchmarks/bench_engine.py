@@ -38,6 +38,20 @@ per-iteration direction trace next to the skip fractions and asserting the
 acceptance ratio on the shuffled path (auto >= 1.3x over the PR 6
 schedule) with round-robin-interleaved min-of-N timing.
 
+The MTEPS-vs-scale suite (ISSUE 10) spawns ``benchmarks.partition_build_child``
+per (scale, channels) point: each child cold-starts, streams a seeded graph500
+RMAT through ``partition_2d_streaming`` (recording build wall + an HONEST peak
+RSS delta — ``ru_maxrss`` is a process-wide high-water mark, so only a fresh
+process gives a build-attributable number), checks bit-identity against the
+in-memory ``partition_2d``, and runs K∈{1,16} lane-batched BFS on the XLA
+backend with cross-build label agreement. Channels here is the partition's
+core count p (one core == one memory channel in the paper's model) on the
+single-process backend; the distributed engine's own sweep is the
+channel_scaling suite above. A separate scale-18 build-only child (~4M edges,
+pull-only, tile_vb=1024) asserts the bounded-memory acceptance:
+peak RSS delta < 4x the final packed footprint. Every in-process record also
+carries ``partition_build_s`` and the run's ``peak_rss_mb``.
+
 ``python -m benchmarks.bench_engine --smoke`` runs a tiny-graph CI variant:
 asserts the metric keys and Pallas/XLA agreement plus ONE multi-channel
 point (no JSON write) so both perf paths are exercised on every CI run.
@@ -55,7 +69,7 @@ import sys
 import numpy as np
 
 import repro.core.graph as G
-from benchmarks.common import mteps, time_call
+from benchmarks.common import mteps, peak_rss_mb, time_call, timed_build
 from repro.core.engine import EngineOptions, run, run_frontier_trace
 from repro.core.partition import PartitionConfig, partition_2d
 from repro.core.problems import bfs, bfs_multi, pagerank, wcc
@@ -166,7 +180,7 @@ def direction_record(gname, g, root, cfg, pr6_cfg=None, reps=13,
     pull-only dynamic schedule on its own config as the acceptance baseline.
     ``time_it=False`` skips the wall-clock arms (kept for fast checks)."""
     prob = bfs(root)
-    pg = partition_2d(g, PartitionConfig(**cfg))
+    pg, build_s = timed_build(partition_2d, g, PartitionConfig(**cfg))
     o_pull = EngineOptions(direction="pull")
     o_auto = EngineOptions(direction="auto")
     res_x = run(prob, g, pg, EngineOptions(backend="xla"))
@@ -185,6 +199,8 @@ def direction_record(gname, g, root, cfg, pr6_cfg=None, reps=13,
     row = {
         "graph": gname, "problem": "bfs", "V": g.num_vertices,
         "E": g.num_edges, "p": pg.p, "l": pg.l,
+        "partition_build_s": build_s,
+        "peak_rss_mb": peak_rss_mb(),
         "direction_alpha": o_auto.direction_alpha,
         "direction_beta": o_auto.direction_beta,
         "stream_bytes_per_edge": pg.stream_bytes_per_edge,
@@ -269,16 +285,35 @@ def _labels_agree(prob, a, b) -> bool:
 def _bench_scales(emit, records):
     for sname, (s, d, root) in SCALES.items():
         g = G.symmetrize(G.rmat(s, d, seed=1))
-        pg = partition_2d(g, PartitionConfig(p=4, l=4, lane=8, stride=100))
+        pg, build_s = timed_build(
+            partition_2d, g, PartitionConfig(p=4, l=4, lane=8, stride=100)
+        )
+        rep = pg.memory_report()
+        emit(
+            f"engine/{sname}/memory", 0.0,
+            f"device={rep['device_total_bytes'] / 1e6:.2f}MB "
+            f"dev_B/edge={rep['device_bytes_per_edge']:.1f} "
+            f"total_B/edge={rep['bytes_per_edge']:.1f} build={build_s:.3f}s",
+        )
         for pname, prob in (("bfs", bfs(root)), ("pr", pagerank(tol=1e-4))):
             gg = G.rmat(s, d, seed=1) if pname == "pr" else g
-            pgg = (
-                partition_2d(gg, PartitionConfig(p=4, l=4, lane=8))
-                if pname == "pr"
-                else pg
-            )
+            if pname == "pr":
+                pgg, pg_build_s = timed_build(
+                    partition_2d, gg, PartitionConfig(p=4, l=4, lane=8)
+                )
+            else:
+                pgg, pg_build_s = pg, build_s
+            prep = pgg.memory_report()
             row = {"graph": sname, "problem": pname, "V": gg.num_vertices,
                    "E": gg.num_edges, "p": pgg.p, "l": pgg.l,
+                   "partition_build_s": pg_build_s,
+                   "peak_rss_mb": peak_rss_mb(),
+                   "device_bytes_per_edge": prep["device_bytes_per_edge"],
+                   "memory_report": {
+                       "device": prep["device"],
+                       "device_total_bytes": prep["device_total_bytes"],
+                       "total_bytes": prep["total_bytes"],
+                   },
                    "tile_shape": list(pgg.tile_word.shape),
                    "tile_padding_ratio": pgg.tile_padding_ratio,
                    "src_bits": pgg.src_bits,
@@ -310,11 +345,15 @@ def skew_record(gname, gspec, cfg, prob_pairs, time_fn=None):
     """One skew-suite record: split vs unsplit layouts + backend agreement.
     ``time_fn=None`` skips timing (smoke mode)."""
     g = skewed_graph(**gspec)
-    pg_split = partition_2d(g, PartitionConfig(**cfg))  # splitting on (default)
+    # splitting on (default)
+    pg_split, build_s = timed_build(partition_2d, g, PartitionConfig(**cfg))
     pg_none = partition_2d(g, PartitionConfig(**cfg, split_threshold=None))
     row = {
         "graph": gname, "V": g.num_vertices, "E": g.num_edges,
         "p": pg_split.p, "l": pg_split.l,
+        "partition_build_s": build_s,
+        "peak_rss_mb": peak_rss_mb(),
+        "device_bytes_per_edge": pg_split.memory_report()["device_bytes_per_edge"],
         "tile_shape": list(pg_split.tile_word.shape),
         "t_max": int(pg_split.tile_word.shape[3]),
         "t_max_unsplit": int(pg_none.tile_word.shape[3]),
@@ -367,10 +406,13 @@ def highdiam_record(gname, gspec, cfg, prob_pairs, time_fn=None):
     """One high-diameter record: per-iteration dynamic skip trace + three-way
     (dynamic / static / XLA) agreement. ``time_fn=None`` skips timing."""
     g = path_grid_graph(**gspec)
-    pg = partition_2d(g, PartitionConfig(**cfg))
+    pg, build_s = timed_build(partition_2d, g, PartitionConfig(**cfg))
     row = {
         "graph": gname, "V": g.num_vertices, "E": g.num_edges,
         "p": pg.p, "l": pg.l, "tile_shape": list(pg.tile_word.shape),
+        "partition_build_s": build_s,
+        "peak_rss_mb": peak_rss_mb(),
+        "device_bytes_per_edge": pg.memory_report()["device_bytes_per_edge"],
         "src_bits": pg.src_bits,
         "stream_bytes_per_edge": pg.stream_bytes_per_edge,
         "coverage_bytes_per_edge": pg.coverage_bytes_per_edge,
@@ -494,10 +536,14 @@ def multi_query_record(g, pg, roots, k, time_fn, sequential_sample=None):
 def _bench_multi_query(emit, records):
     s, d, _ = SCALES["rmat11"]
     g = G.symmetrize(G.rmat(s, d, seed=1))
-    pg = partition_2d(g, PartitionConfig(p=4, l=4, lane=8, stride=100))
+    pg, build_s = timed_build(
+        partition_2d, g, PartitionConfig(p=4, l=4, lane=8, stride=100)
+    )
     roots = query_workload(max(MULTI_K), g.num_vertices, seed=0)
     row = {"graph": "rmat11", "problem": "bfs_multi", "V": g.num_vertices,
            "E": g.num_edges, "p": pg.p, "l": pg.l,
+           "partition_build_s": build_s,
+           "peak_rss_mb": peak_rss_mb(),
            "stream_bytes_per_edge": pg.stream_bytes_per_edge,
            "points": []}
     for k in MULTI_K:
@@ -556,7 +602,9 @@ def channel_record(p: int, scale: int = 10, degree: int = 8) -> dict:
         ("bfs", bfs(3), g, 100),
         ("pr", pagerank(tol=1e-4), gd, None),
     ):
-        pg = partition_2d(graph, PartitionConfig(p=p, l=2, lane=8, stride=stride))
+        pg, build_s = timed_build(
+            partition_2d, graph, PartitionConfig(p=p, l=2, lane=8, stride=stride)
+        )
         res_d = run_distributed(prob, graph, pg, mesh)
         res_s = run(prob, graph, pg, EngineOptions(backend="pallas"))
         agree = (
@@ -575,9 +623,11 @@ def channel_record(p: int, scale: int = 10, degree: int = 8) -> dict:
             "skipped_tile_fraction": pg.skipped_tile_fraction,
             "iterations": res_d.iterations,
             "agreement": bool(agree),
+            "partition_build_s": build_s,
             "distributed_us": t * 1e6,
             "distributed_mteps": mteps(graph.num_edges, t),
         }
+    rec["peak_rss_mb"] = peak_rss_mb()
     return rec
 
 
@@ -612,6 +662,113 @@ def _bench_channels(emit, channel_records, channels=CHANNELS):
         )
 
 
+# ---------------------------------------------------------------------------
+# MTEPS-vs-scale suite (ISSUE 10): graph500-style RMAT through the streaming
+# (out-of-core) partition build, swept over scale x K lanes x channels. Each
+# point runs in benchmarks.partition_build_child — a fresh process — because
+# ru_maxrss is a process-wide high-water mark: only a cold start yields an
+# honest build-attributable RSS delta. "channels" is the partition core count
+# p (the paper maps one core to one memory channel); the engine points run
+# the single-process XLA backend, so the channel axis here measures how the
+# p-way 2-D layout scales the SAME stream, while the distributed
+# channel_scaling sweep above owns the multi-device story.
+# ---------------------------------------------------------------------------
+
+MTEPS_SCALES = (10, 12, 14)
+MTEPS_CHANNELS = (1, 2)
+MTEPS_K_LANES = "1,16"
+
+# the bounded-memory acceptance build: scale-18 RMAT (~262k V, ~4.2M directed
+# edges), pull-only, coarse tiles (tile_vb=1024 — the default sub_size-sized
+# row blocks degenerate to R=2 at this scale), l=4 keeps the gathered
+# interval inside the 16-bit packed regime
+SCALE18_ARGS = (
+    "--scale", "18", "--edge-factor", "16", "--p", "2", "--l", "4",
+    "--tile-vb", "1024", "--no-push", "--assert-rss-ratio", "4.0",
+)
+
+# metric keys every mteps_vs_scale point must carry (asserted by --scale-smoke)
+MTEPS_METRIC_KEYS = (
+    "scale", "E", "partition_build_s", "peak_rss_mb", "rss_delta_mb",
+    "footprint_mb", "device_bytes_per_edge", "rss_over_footprint",
+    "bit_identical", "points",
+)
+
+
+def _spawn_build_child(extra_args=()) -> dict:
+    env = dict(os.environ)
+    env.setdefault("JAX_PLATFORMS", "cpu")  # libtpu present: pin CPU backend
+    env["PYTHONPATH"] = "src" + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else ""
+    )
+    res = subprocess.run(
+        [sys.executable, "-m", "benchmarks.partition_build_child", *extra_args],
+        capture_output=True, text=True, env=env, cwd=str(JSON_PATH.parent),
+        timeout=1200,
+    )
+    assert res.returncode == 0, f"STDOUT:\n{res.stdout}\nSTDERR:\n{res.stderr}"
+    return json.loads(res.stdout.strip().splitlines()[-1])
+
+
+def _bench_mteps_vs_scale(emit) -> dict:
+    points = []
+    for scale in MTEPS_SCALES:
+        for p in MTEPS_CHANNELS:
+            rec = _spawn_build_child((
+                "--scale", str(scale), "--edge-factor", "8",
+                "--p", str(p), "--l", "2",
+                "--compare", "--engine", "--k-lanes", MTEPS_K_LANES,
+            ))
+            rec["channels"] = p
+            assert rec["bit_identical"], rec
+            assert all(pt["agreement"] for pt in rec["points"]), rec
+            points.append(rec)
+            for pt in rec["points"]:
+                emit(
+                    f"engine/mteps-vs-scale/s{scale}/c{p}/K={pt['K']}",
+                    pt["us"],
+                    f"mteps={pt['mteps']:.2f} iters={pt['iterations']} "
+                    f"build={rec['partition_build_s']:.2f}s "
+                    f"rss_delta={rec['rss_delta_mb']:.0f}MB "
+                    f"agree={pt['agreement']}",
+                )
+    # the acceptance build: scale 18, streaming, bounded memory (the child
+    # asserts rss_over_footprint < 4; no --compare — materializing 4M edges
+    # in RAM is exactly what this path exists to avoid)
+    b18 = _spawn_build_child(SCALE18_ARGS)
+    emit(
+        "engine/mteps-vs-scale/s18/build",
+        b18["partition_build_s"] * 1e6,
+        f"E={b18['E']} footprint={b18['footprint_mb']:.0f}MB "
+        f"rss_delta={b18['rss_delta_mb']:.0f}MB "
+        f"ratio={b18['rss_over_footprint']:.2f}x "
+        f"dev_B/edge={b18['device_bytes_per_edge']:.1f}",
+    )
+    return {"points": points, "build_scale18": b18}
+
+
+def scale_smoke(emit):
+    """CI acceptance point for the streaming partitioner (``make bench-scale``):
+    one scale-14 RMAT through ``partition_2d_streaming`` in a cold child under
+    an asserted RSS ceiling, bit-identity vs the in-memory build, and XLA BFS
+    label agreement across both builds. No JSON write."""
+    rec = _spawn_build_child((
+        "--scale", "14", "--edge-factor", "8", "--p", "2", "--l", "2",
+        "--compare", "--engine", "--k-lanes", "1",
+        "--assert-rss-delta-mb", "256",
+    ))
+    for key in MTEPS_METRIC_KEYS:
+        assert key in rec, f"missing mteps_vs_scale metric {key!r}"
+    assert rec["bit_identical"], "streaming build diverged from partition_2d"
+    assert all(pt["agreement"] for pt in rec["points"]), rec["points"]
+    emit(
+        "engine/scale-smoke", rec["points"][0]["us"],
+        f"scale=14 E={rec['E']} build={rec['partition_build_s']:.2f}s "
+        f"rss_delta={rec['rss_delta_mb']:.0f}MB "
+        f"mteps={rec['points'][0]['mteps']:.2f} bit_identical=ok agreement=ok",
+    )
+
+
 def main(emit):
     records = []
     _bench_scales(emit, records)
@@ -624,16 +781,19 @@ def main(emit):
     assert all(
         rec[p]["agreement"] for rec in channel_records for p in ("bfs", "pr")
     ), channel_records
+    scale_curve = _bench_mteps_vs_scale(emit)
     # Merge rather than overwrite: --serve-smoke owns the "serving" key and
     # may have run first (check.sh order) or in a previous invocation.
     data = json.loads(JSON_PATH.read_text()) if JSON_PATH.exists() else {}
     data["records"] = records
     data["channel_scaling"] = channel_records
+    data["mteps_vs_scale"] = scale_curve
     JSON_PATH.write_text(json.dumps(data, indent=2) + "\n")
     emit(
         "engine/json", 0.0,
         f"wrote {JSON_PATH.name} ({len(records)} records, "
-        f"{len(channel_records)} channel points)",
+        f"{len(channel_records)} channel points, "
+        f"{len(scale_curve['points'])} scale points)",
     )
 
 
@@ -804,6 +964,7 @@ def serve_smoke(emit):
         "graph": {"scale": scale, "degree": degree, "num_edges": int(g.num_edges),
                   "delta_edges": 32},
         "lanes": lanes,
+        "peak_rss_mb": peak_rss_mb(),
         **s,
     }
     JSON_PATH.write_text(json.dumps(data, indent=2) + "\n")
@@ -826,6 +987,10 @@ if __name__ == "__main__":
                     help="serving CI pass: mixed-op stream + mid-stream delta "
                          "flush; merges a 'serving' key into BENCH_engine.json "
                          "and asserts the steady BFS batch budget")
+    ap.add_argument("--scale-smoke", action="store_true",
+                    help="streaming-partitioner CI pass (make bench-scale): "
+                         "scale-14 RMAT in a cold child under an asserted RSS "
+                         "ceiling + bit-identity + label agreement; no JSON")
     ap.add_argument("--channel-child", type=int, default=None, metavar="P",
                     help="internal: one channel-sweep point (needs P forced "
                          "host devices); prints a JSON record")
@@ -840,5 +1005,7 @@ if __name__ == "__main__":
         print(json.dumps(channel_record(args.channel_child, scale=args.channel_scale)))
     elif args.serve_smoke:
         serve_smoke(_emit)
+    elif args.scale_smoke:
+        scale_smoke(_emit)
     else:
         (smoke if args.smoke else main)(_emit)

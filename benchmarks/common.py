@@ -3,6 +3,7 @@ statistics matched to the paper's graphs at CPU-tractable scale), timing
 helpers, and MTEPS metrics (paper §IV-B)."""
 from __future__ import annotations
 
+import resource
 import time
 from typing import Callable, Dict, Tuple
 
@@ -10,7 +11,36 @@ import numpy as np
 
 import repro.core.graph as G
 
-__all__ = ["BENCH_GRAPHS", "bench_graphs", "time_call", "mteps", "mteps_star"]
+__all__ = [
+    "BENCH_GRAPHS", "bench_graphs", "time_call", "mteps", "mteps_star",
+    "peak_rss_mb", "timed_build",
+]
+
+
+def peak_rss_mb() -> float:
+    """Process-wide peak resident set size in MB — recorded in every
+    benchmark record so the bounded-memory claim is a measured number.
+    Reads ``VmHWM`` (per-mm, resets on exec) rather than ``ru_maxrss``
+    (inherited across fork+exec on Linux, so subprocesses would report the
+    parent's peak). It is still a high-water mark: honest BUILD deltas need
+    a fresh subprocess (see ``benchmarks.partition_build_child``);
+    in-process records report the run's overall peak."""
+    try:
+        with open("/proc/self/status") as f:
+            for line in f:
+                if line.startswith("VmHWM:"):
+                    return int(line.split()[1]) / 1024.0
+    except OSError:  # non-Linux fallback (still a peak, unit caveats apply)
+        pass
+    return resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0
+
+
+def timed_build(fn: Callable, *args, **kwargs):
+    """(result, wall_seconds) of one partition build — the per-record
+    ``partition_build_s`` satellite metric."""
+    t0 = time.perf_counter()
+    out = fn(*args, **kwargs)
+    return out, time.perf_counter() - t0
 
 
 def bench_graphs(scale: str = "small") -> Dict[str, Tuple[G.COOGraph, int]]:

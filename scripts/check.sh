@@ -31,6 +31,12 @@ python -m benchmarks.bench_engine --smoke
 python -m repro.launch.serve --arch graph --smoke
 python -m benchmarks.bench_engine --serve-smoke
 
+# streaming-partitioner smoke (make bench-scale, docs/scaling.md): scale-14
+# RMAT through the out-of-core build in a cold child — asserts the RSS-delta
+# ceiling (bounded memory), bit-identity with the in-memory partition_2d,
+# and BFS label agreement across both builds.
+python -m benchmarks.bench_engine --scale-smoke
+
 # sharded job (make check-dist): distributed engine + repro.dist suites under
 # 8 simulated memory channels — the un-skipped test_distributed /
 # test_elastic / test_fault_tolerance files plus the equivalence suite and

@@ -1,1 +1,2 @@
-from repro.data import neighbor_sampler, synthetic  # noqa: F401
+from repro.data import neighbor_sampler, rmat, synthetic  # noqa: F401
+from repro.data.rmat import RMATStream, materialize, rmat_chunks  # noqa: F401

@@ -28,7 +28,10 @@ from repro.kernels.csr_gather_reduce.ref import gather_reduce_reference
 
 __all__ = [
     "TileLayout",
+    "TilePlan",
     "PushTileLayout",
+    "plan_tiles",
+    "plan_push_tiles",
     "prepare_tiles",
     "prepare_push_tiles",
     "choose_src_bits",
@@ -365,6 +368,124 @@ def _lpt_max_load(row_counts: np.ndarray, r_blocks: int, vb: int) -> int:
     return int(loads.max())
 
 
+@dataclasses.dataclass(frozen=True)
+class TilePlan:
+    """Shape + row-map decisions of one bucket's tile layout, computed from
+    the per-row edge counts ALONE — no edge data needed.
+
+    This is the single source of truth for everything about a bucket's layout
+    that does not depend on which concrete edges fill the slots: the
+    out-of-core streaming partitioner (``partition_2d_streaming``) calls
+    ``plan_tiles`` during its counting pass to pre-size the stacked packed
+    buffers before any edge is placed, and ``prepare_tiles`` consumes the
+    same plan to place edges — so the two paths cannot disagree on shapes,
+    split chunking, or row placement. A natural row with ``count`` edges and
+    ``k = n_chunks[row]`` virtual rows splits into even chunks whose sizes
+    are fully determined by (count, k): chunk ``c`` holds the edges ``j``
+    with ``j * k // count == c``, i.e. ``ceil((c+1)*count/k) -
+    ceil(c*count/k)`` edges — what ``virt_counts`` records.
+    """
+
+    r_blocks: int  # row blocks (>= num_rows/vb when virtual rows need room)
+    t_tiles: int  # max real edge tiles over the row blocks
+    t_tiles_unsplit: int  # T without splitting (== t_tiles when no split)
+    num_split_rows: int  # natural rows split into > 1 virtual rows
+    s_max: int  # split-map width: max virtual rows per natural row (>= 1)
+    # exactly one of row_pos / row_orig is set when the layout is non-trivial:
+    row_pos: np.ndarray | None  # (num_rows,) natural row -> packed position
+    row_orig: np.ndarray | None  # (r_blocks * vb,) packed position -> row
+    # split-mode edge-placement inputs (None when no row split):
+    n_chunks: np.ndarray | None  # (num_rows,) virtual rows per natural row
+    virt_base: np.ndarray | None  # (num_rows,) first virtual-row id per row
+    virt_pos: np.ndarray | None  # (num_virtual,) virtual row -> packed pos
+
+
+def plan_tiles(
+    row_counts: np.ndarray,  # (num_rows,) real edges per natural row
+    *,
+    num_rows: int,
+    vb: int,
+    eb: int,
+    balance_rows: bool = False,
+    split_threshold: int | None = None,
+) -> TilePlan:
+    """Decide one bucket's tile-layout shape from row counts alone.
+
+    Mirrors (and is consumed by) ``prepare_tiles``: the split decision, even
+    chunking, LPT placement, and the resulting (R, T) are pure functions of
+    the per-row counts, so a streaming builder can size its output buffers in
+    a counting pass and the edge-placement pass is guaranteed to fit."""
+    assert num_rows % vb == 0, (num_rows, vb)
+    r_base = num_rows // vb
+    row_counts = np.asarray(row_counts, dtype=np.int64)
+    thr = max(int(split_threshold), 1) if split_threshold is not None else None
+    do_split = (
+        balance_rows and thr is not None and bool((row_counts > thr).any())
+    )
+    if do_split:
+        n_chunks = np.maximum(1, -(-row_counts // thr)).astype(np.int64)
+        num_split_rows = int((n_chunks > 1).sum())
+        num_virtual = int(n_chunks.sum())
+        r_blocks = max(r_base, -(-num_virtual // vb))
+        t_unsplit = max(1, -(-_lpt_max_load(row_counts, r_base, vb) // eb))
+        virt_base = np.cumsum(n_chunks) - n_chunks
+        virt_orig = np.repeat(np.arange(num_rows, dtype=np.int64), n_chunks)
+        # even-chunk sizes from (count, k) alone: chunk c of a row with count
+        # edges and k chunks holds ceil((c+1)*count/k) - ceil(c*count/k).
+        vidx = np.arange(num_virtual, dtype=np.int64) - virt_base[virt_orig]
+        cnt, k = row_counts[virt_orig], n_chunks[virt_orig]
+        virt_counts = (-(-((vidx + 1) * cnt) // k)) - (-(-(vidx * cnt) // k))
+        pos_v = _balance_row_blocks(virt_counts, r_blocks, vb)
+        row_orig = np.full(r_blocks * vb, -1, dtype=np.int32)
+        row_orig[pos_v] = virt_orig
+        loads = np.bincount(
+            pos_v // vb, weights=virt_counts.astype(np.float64),
+            minlength=r_blocks,
+        )
+        t_tiles = max(1, int(-(-int(loads.max()) // eb)))
+        return TilePlan(
+            r_blocks=r_blocks, t_tiles=t_tiles, t_tiles_unsplit=t_unsplit,
+            num_split_rows=num_split_rows, s_max=int(n_chunks.max()),
+            row_pos=None, row_orig=row_orig, n_chunks=n_chunks,
+            virt_base=virt_base, virt_pos=pos_v,
+        )
+    if balance_rows and r_base > 1:
+        row_pos = _balance_row_blocks(row_counts, r_base, vb)
+        loads = np.bincount(
+            row_pos // vb, weights=row_counts.astype(np.float64),
+            minlength=r_base,
+        )
+        t_tiles = max(1, int(-(-int(loads.max()) // eb)))
+    else:
+        row_pos = None
+        loads = row_counts.reshape(r_base, vb).sum(axis=1)
+        t_tiles = max(1, int(-(-int(loads.max()) // eb))) if loads.size else 1
+    return TilePlan(
+        r_blocks=r_base, t_tiles=t_tiles, t_tiles_unsplit=t_tiles,
+        num_split_rows=0, s_max=1, row_pos=row_pos, row_orig=None,
+        n_chunks=None, virt_base=None, virt_pos=None,
+    )
+
+
+def plan_push_tiles(
+    src_counts: np.ndarray,  # (gathered_size,) real edges per gathered source
+    *,
+    gathered_size: int,
+    block_sources: int,
+    eb: int,
+) -> tuple[int, int]:
+    """Push-stream shape from per-source counts alone: ``(B, Tp)`` matching
+    what ``prepare_push_tiles`` will produce for the same bucket."""
+    n_blocks = max(1, -(-gathered_size // block_sources))
+    src_counts = np.asarray(src_counts, dtype=np.int64)
+    pad = n_blocks * block_sources - src_counts.shape[0]
+    if pad:
+        src_counts = np.concatenate([src_counts, np.zeros(pad, np.int64)])
+    counts = src_counts.reshape(n_blocks, block_sources).sum(axis=1)
+    t_tiles = max(1, int(-(-int(counts.max()) // eb))) if counts.size else 1
+    return n_blocks, t_tiles
+
+
 def prepare_tiles(
     src_gidx: np.ndarray,  # (E,) int32
     dst_lidx: np.ndarray,  # (E,) int32, sorted ascending
@@ -376,6 +497,7 @@ def prepare_tiles(
     *,
     balance_rows: bool = False,
     split_threshold: int | None = None,
+    plan: TilePlan | None = None,
 ) -> TileLayout:
     """Bin one (dst-sorted) edge bucket into (R, T, Eb) row-block tiles.
 
@@ -388,9 +510,14 @@ def prepare_tiles(
     the caller must apply the second-level combine (``combine_split_rows``).
     When no row exceeds the threshold the output is byte-for-byte identical
     to the unsplit layout.
+
+    ``plan``: a ``TilePlan`` previously computed by ``plan_tiles`` for THIS
+    bucket's row counts under the same (vb, eb, balance_rows,
+    split_threshold) — skips the redundant re-plan (the LPT pass is the
+    expensive part at large vpc). The caller owns the consistency; the
+    t_tiles assertion below catches a mismatched plan.
     """
     assert num_rows % vb == 0, (num_rows, vb)
-    r_blocks = num_rows // vb
     src_gidx = np.asarray(src_gidx)
     dst_lidx = np.asarray(dst_lidx)
     valid = np.asarray(valid)
@@ -400,43 +527,28 @@ def prepare_tiles(
     src_r = src_gidx[keep]
     dst_r = dst_lidx[keep]
     w_r = weights[keep] if weights is not None else None
-    row_pos = row_orig = None
-    num_split_rows = 0
-    t_unsplit = None
     row_counts = np.bincount(dst_r, minlength=num_rows)
-    thr = max(int(split_threshold), 1) if split_threshold is not None else None
-    do_split = (
-        balance_rows and thr is not None and bool((row_counts > thr).any())
-    )
-    if do_split:
+    if plan is None:
+        plan = plan_tiles(
+            row_counts, num_rows=num_rows, vb=vb, eb=eb,
+            balance_rows=balance_rows, split_threshold=split_threshold,
+        )
+    r_blocks = plan.r_blocks
+    if plan.row_orig is not None:
         # level-1 layout over VIRTUAL rows: chunk c of natural row v holds
         # the edges j with j * n_chunks[v] // count[v] == c (even split, so
-        # chunk sizes differ by at most 1 and never exceed thr).
-        n_chunks = np.maximum(1, -(-row_counts // thr)).astype(np.int64)
-        num_split_rows = int((n_chunks > 1).sum())
-        num_virtual = int(n_chunks.sum())
-        r_blocks = max(r_blocks, -(-num_virtual // vb))
-        t_unsplit = max(1, -(-_lpt_max_load(row_counts, num_rows // vb, vb) // eb))
-        virt_base = np.cumsum(n_chunks) - n_chunks  # (num_rows,)
-        virt_orig = np.repeat(
-            np.arange(num_rows, dtype=np.int64), n_chunks
-        )  # (num_virtual,)
+        # chunk sizes differ by at most 1 and never exceed the threshold).
         row_starts = np.cumsum(row_counts) - row_counts
         pos_in_row = np.arange(dst_r.shape[0], dtype=np.int64) - row_starts[dst_r]
-        chunk = pos_in_row * n_chunks[dst_r] // np.maximum(row_counts[dst_r], 1)
-        vrow = virt_base[dst_r] + chunk
-        virt_counts = np.bincount(vrow, minlength=num_virtual)
-        pos_v = _balance_row_blocks(virt_counts, r_blocks, vb)
-        row_orig = np.full(r_blocks * vb, -1, dtype=np.int32)
-        row_orig[pos_v] = virt_orig
-        pdst = pos_v[vrow]
+        chunk = pos_in_row * plan.n_chunks[dst_r] // np.maximum(row_counts[dst_r], 1)
+        vrow = plan.virt_base[dst_r] + chunk
+        pdst = plan.virt_pos[vrow]
         order = np.argsort(pdst // vb, kind="stable")
         src_r, pdst, orig_idx = src_r[order], pdst[order], orig_idx[order]
         if w_r is not None:
             w_r = w_r[order]
-    elif balance_rows and r_blocks > 1:
-        row_pos = _balance_row_blocks(row_counts, r_blocks, vb)
-        pdst = row_pos[dst_r]
+    elif plan.row_pos is not None:
+        pdst = plan.row_pos[dst_r]
         # packed positions are not sorted; regroup by block, keeping the
         # original (dst-sorted) edge order inside each block (stable).
         order = np.argsort(pdst // vb, kind="stable")
@@ -448,6 +560,7 @@ def prepare_tiles(
     block = pdst // vb
     counts = np.bincount(block, minlength=r_blocks)
     t_tiles = max(1, int(-(-counts.max() // eb))) if counts.size else 1
+    assert t_tiles == plan.t_tiles, (t_tiles, plan.t_tiles)
     src_t = np.zeros((r_blocks, t_tiles, eb), dtype=np.int32)
     dst_t = np.zeros((r_blocks, t_tiles, eb), dtype=np.int32)
     val_t = np.zeros((r_blocks, t_tiles, eb), dtype=bool)
@@ -466,10 +579,10 @@ def prepare_tiles(
             w_t[r].reshape(-1)[:n] = w_r[s:e]
     return TileLayout(
         src=src_t, dstb=dst_t, valid=val_t, weights=w_t, vb=vb,
-        num_rows=num_rows, gather_idx=gat_t, row_pos=row_pos,
+        num_rows=num_rows, gather_idx=gat_t, row_pos=plan.row_pos,
         tile_counts=(-(-counts // eb)).astype(np.int32),
-        row_orig=row_orig, num_split_rows=num_split_rows,
-        t_tiles_unsplit=t_unsplit if t_unsplit is not None else t_tiles,
+        row_orig=plan.row_orig, num_split_rows=plan.num_split_rows,
+        t_tiles_unsplit=plan.t_tiles_unsplit,
     )
 
 
